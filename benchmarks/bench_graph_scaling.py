@@ -1,0 +1,42 @@
+"""Paper Fig. 12: data-graph scaling — partition size, |Σ|, avg_deg(G), |V(G)|."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import build_engine, emit, make_graph, sample_queries
+
+
+def _avg(eng, queries):
+    ts = []
+    for q in queries:
+        _, stats = eng.match(q, return_stats=True)
+        ts.append(stats.filter_time + stats.join_time)
+    return 1e6 * float(np.mean(ts)) if ts else float("nan")
+
+
+def run(full: bool = False):
+    scale = 10 if full else 1
+    # Fig 12(a): partition size
+    g = make_graph(n=2000 * scale, seed=5)
+    for psize in [250, 500, 1000, 2000]:
+        eng = build_engine(g, partition_size=psize * scale)
+        emit(f"fig12a_partition/|V|div_m={psize*scale}", _avg(eng, sample_queries(g)), f"cut={eng.offline_stats['edge_cut']}")
+    # Fig 12(b): label domain size
+    for nl in [20, 100, 200, 500]:
+        g = make_graph(n=1500 * scale, n_labels=nl, seed=6)
+        eng = build_engine(g)
+        emit(f"fig12b_labels/|Σ|={nl}", _avg(eng, sample_queries(g)), "")
+    # Fig 12(c): average degree
+    for deg in [3, 4, 5, 6]:
+        g = make_graph(n=1500 * scale, avg_degree=deg, seed=7)
+        eng = build_engine(g)
+        emit(f"fig12c_degree/avg_deg={deg}", _avg(eng, sample_queries(g)), f"paths={eng.offline_stats['n_paths']}")
+    # Fig 12(d): graph size
+    for n in [1000, 2000, 4000] + ([10000, 100000] if full else []):
+        g = make_graph(n=n, seed=8)
+        eng = build_engine(g)
+        emit(f"fig12d_size/|V|={n}", _avg(eng, sample_queries(g)), "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper Fig. 7: parameter tuning — path length l, embedding dim d,
+number of multi-GNNs n, and query-plan strategies."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import build_engine, emit, make_graph, sample_queries
+
+
+def _avg_time(eng, queries):
+    ts = []
+    for q in queries:
+        _, stats = eng.match(q, return_stats=True)
+        ts.append(stats.filter_time + stats.join_time)
+    return 1e6 * float(np.mean(ts))
+
+
+def run(full: bool = False):
+    g = make_graph(n=5000 if full else 1500, seed=3)
+    queries = sample_queries(g)
+    # Fig 7(a): path length l ∈ {1,2,3}
+    for l in [1, 2, 3]:
+        eng = build_engine(g, path_length=l)
+        emit(f"fig7a_path_length/l={l}", _avg_time(eng, queries), f"paths={eng.offline_stats['n_paths']}")
+    # Fig 7(b): embedding dim d ∈ {2,3,4,5}
+    for d in [2, 3, 4, 5]:
+        eng = build_engine(g, emb_dim=d)
+        emit(f"fig7b_emb_dim/d={d}", _avg_time(eng, queries), "")
+    # Fig 7(c): multi-GNNs n ∈ {0,1,2,3,4}
+    for nm in [0, 1, 2, 3, 4]:
+        eng = build_engine(g, n_multi=nm)
+        emit(f"fig7c_multignn/n={nm}", _avg_time(eng, queries), "")
+    # Fig 7(d): plan strategies × weight metrics (deg / DR)
+    for strat in ["oip", "aip", "eip"]:
+        eng = build_engine(g, plan_strategy=strat)
+        emit(f"fig7d_plan/{strat}(deg)", _avg_time(eng, queries), "")
+    eng = build_engine(g, plan_strategy="aip", plan_weight="dr")
+    emit("fig7d_plan/aip(dr)", _avg_time(eng, queries), "")
+
+
+if __name__ == "__main__":
+    run()

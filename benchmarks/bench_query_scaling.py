@@ -1,0 +1,31 @@
+"""Paper Figs. 10/11: query size |V(q)| and query degree avg_deg(q)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import build_engine, emit, make_graph, sample_queries
+
+
+def run(full: bool = False):
+    g = make_graph(n=5000 if full else 1500, seed=4)
+    eng = build_engine(g)
+    for size in [5, 6, 8, 10, 12]:
+        queries = sample_queries(g, size=size)
+        ts = []
+        for q in queries:
+            _, stats = eng.match(q, return_stats=True)
+            ts.append(stats.filter_time + stats.join_time)
+        if ts:
+            emit(f"fig10_query_size/|Vq|={size}", 1e6 * float(np.mean(ts)), f"n={len(ts)}")
+    for deg in [2, 3, 4]:
+        queries = sample_queries(g, size=8, avg_degree=deg)
+        ts = []
+        for q in queries:
+            _, stats = eng.match(q, return_stats=True)
+            ts.append(stats.filter_time + stats.join_time)
+        if ts:
+            emit(f"fig11_query_degree/deg={deg}", 1e6 * float(np.mean(ts)), f"n={len(ts)}")
+
+
+if __name__ == "__main__":
+    run()

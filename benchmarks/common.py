@@ -1,0 +1,82 @@
+"""Shared benchmark plumbing: CSV emission + standard graph/query sets.
+
+Every ``bench_*`` module maps to one paper table/figure (DESIGN §7) and
+prints ``name,us_per_call,derived`` CSV rows.  Sizes are scaled down from
+the paper's (|V(G)| = 50K default) to run on this CPU container in
+minutes; ``--full`` restores paper scale.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import GnnPeConfig, GnnPeEngine, TrainConfig
+from repro.graphs import newman_watts_strogatz, random_connected_query
+
+__all__ = ["emit", "timed", "build_engine", "make_graph", "sample_queries", "DEFAULTS"]
+
+# paper defaults (Table 3), scaled for CPU: |V(G)| 50K → 2K, runs 100 → 10
+DEFAULTS = dict(
+    n_vertices=2000,
+    avg_degree=4,
+    n_labels=100,
+    query_size=8,
+    n_queries=10,
+    path_length=2,
+    emb_dim=2,
+    n_multi=2,
+    partition_size=1000,
+)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def make_graph(n=None, avg_degree=None, n_labels=None, label_dist="uniform", seed=0):
+    d = DEFAULTS
+    n = n or d["n_vertices"]
+    avg_degree = avg_degree or d["avg_degree"]
+    n_labels = n_labels or d["n_labels"]
+    return newman_watts_strogatz(
+        n, k=max(int(avg_degree), 2), p=0.1, n_labels=n_labels, label_dist=label_dist, seed=seed
+    )
+
+
+def build_engine(g, encoder="monotone", **overrides):
+    d = DEFAULTS
+    n_parts = max(g.n_vertices // overrides.pop("partition_size", d["partition_size"]), 1)
+    cfg = GnnPeConfig(
+        path_length=overrides.pop("path_length", d["path_length"]),
+        emb_dim=overrides.pop("emb_dim", d["emb_dim"]),
+        n_multi=overrides.pop("n_multi", d["n_multi"]),
+        n_partitions=n_parts,
+        encoder=encoder,
+        train=TrainConfig(max_epochs=overrides.pop("max_epochs", 150)),
+        **overrides,
+    )
+    return GnnPeEngine(cfg).build(g)
+
+
+def sample_queries(g, n=None, size=None, avg_degree=None, seed0=0):
+    d = DEFAULTS
+    n = n or d["n_queries"]
+    size = size or d["query_size"]
+    out = []
+    for s in range(n):
+        try:
+            out.append(random_connected_query(g, size, seed=seed0 + s, avg_degree=avg_degree))
+        except RuntimeError:
+            continue
+    return out

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` restores paper-scale
+sizes (hours on this CPU container; default sizes finish in minutes).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, help="substring filter on bench name")
+    args = ap.parse_args()
+
+    from . import (
+        bench_graph_scaling,
+        bench_offline,
+        bench_params,
+        bench_pruning,
+        bench_query_scaling,
+        bench_vs_baselines,
+    )
+
+    benches = [
+        ("fig8_pruning", bench_pruning.run),
+        ("fig9_baselines", bench_vs_baselines.run),
+        ("fig7_params", bench_params.run),
+        ("fig10_11_query", bench_query_scaling.run),
+        ("fig12_graph", bench_graph_scaling.run),
+        ("fig5_13_offline", bench_offline.run),
+    ]
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn(full=args.full)
+        except Exception as e:  # keep the harness running
+            print(f"{name},nan,ERROR:{type(e).__name__}:{e}", file=sys.stdout)
+            raise
+    print(f"# total_wall_s={time.perf_counter()-t0:.1f}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

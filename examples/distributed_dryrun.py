@@ -1,0 +1,36 @@
+"""Walk one architecture through the production-mesh dry-run interactively:
+lower + compile qwen3-moe train_4k on the 512-chip multi-pod mesh and print
+the memory/cost/collective analysis (what launch/dryrun.py records).
+
+    PYTHONPATH=src python examples/distributed_dryrun.py [--arch gemma3-1b] [--shape train_4k]
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="multi", choices=["single", "multi"])
+    args = ap.parse_args()
+
+    from pathlib import Path
+
+    from repro.launch.dryrun import run_cell
+
+    rec = run_cell(args.arch, args.shape, args.mesh, Path("/tmp/dryrun_example"))
+    print(f"\n=== {args.arch} / {args.shape} on the {rec['n_devices']}-chip mesh ===")
+    print(f"compile: {rec['compile_s']:.1f}s")
+    mem = rec["memory"]
+    print(f"per-device memory: peak {mem.get('peak_memory_in_bytes',0)/1e9:.2f} GB "
+          f"(args {mem.get('argument_size_in_bytes',0)/1e9:.2f} GB)")
+    print(f"per-device HLO FLOPs {rec['flops']:.3e}, bytes {rec['bytes_fused']:.3e}")
+    print("collectives:", {k: f"{v/1e9:.2f} GB" for k, v in rec["collective_bytes"].items()})
+
+
+if __name__ == "__main__":
+    main()

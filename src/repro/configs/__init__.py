@@ -1,0 +1,28 @@
+from .base import (
+    ArchDef,
+    ShapeCell,
+    build_step,
+    init_params,
+    input_pspecs,
+    input_specs,
+    make_batch,
+    opt_init,
+    param_pspecs,
+)
+from .registry import all_cells, get_arch, list_archs, resolve_config
+
+__all__ = [
+    "ArchDef",
+    "ShapeCell",
+    "build_step",
+    "init_params",
+    "input_pspecs",
+    "input_specs",
+    "make_batch",
+    "opt_init",
+    "param_pspecs",
+    "all_cells",
+    "get_arch",
+    "list_archs",
+    "resolve_config",
+]

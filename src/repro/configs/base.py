@@ -1,0 +1,599 @@
+"""Architecture/shape registry plumbing.
+
+Every assigned architecture ships an ``ArchDef`` with its exact published
+config, a reduced smoke config, and the set of shape cells.  This module
+builds, per (arch × shape):
+
+  * ``input_specs``   — jax.ShapeDtypeStruct stand-ins (no allocation)
+  * ``input_pspecs``  — PartitionSpec tree matching the specs
+  * ``make_batch``    — concrete (small) arrays for CPU smoke tests
+  * ``build_step``    — the jittable step fn (train/prefill/decode/...)
+  * ``param_pspecs``  — parameter sharding rules
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..dist.sharding import DP, lm_param_specs, recsys_param_specs, replicated_specs
+from ..models import (
+    GNNConfig,
+    RecsysConfig,
+    TransformerConfig,
+    dcn_forward,
+    dcn_loss,
+    decode_step,
+    gnn_energy_loss,
+    gnn_forward_blocks,
+    gnn_node_loss,
+    init_cache,
+    init_dcn_params,
+    init_gnn_params,
+    init_lm_params,
+    lm_forward,
+    lm_loss,
+    retrieval_scores,
+)
+from ..train.optimizer import OptConfig, adamw_init, adamw_update
+
+__all__ = ["ShapeCell", "ArchDef", "LM_SHAPES", "GNN_SHAPES", "RECSYS_SHAPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str  # train | prefill | decode | serve | retrieval | train_blocks | train_mol
+    meta: dict
+    skip: str | None = None  # reason if this (arch, shape) is skipped
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    name: str
+    family: str  # lm | gnn | recsys | gnn_pe
+    make_config: Callable[[bool], Any]  # smoke: bool → model config
+    shapes: tuple
+    source: str = ""
+    notes: str = ""
+
+    def cell(self, shape_name: str) -> ShapeCell:
+        for c in self.shapes:
+            if c.name == shape_name:
+                return c
+        raise KeyError(f"{self.name} has no shape {shape_name}")
+
+
+LM_SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433, n_classes=7, kind="train"),
+    "minibatch_lg": dict(
+        n_nodes=232_965,
+        n_edges=114_615_892,
+        batch_nodes=1024,
+        fanout=(15, 10),
+        d_feat=602,
+        n_classes=41,
+        kind="train_blocks",
+    ),
+    "ogb_products": dict(
+        n_nodes=2_449_029, n_edges=61_859_140, d_feat=100, n_classes=47, kind="train"
+    ),
+    "molecule": dict(n_nodes=30, n_edges=64, batch=128, d_feat=16, kind="train_mol"),
+}
+RECSYS_SHAPES = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262144, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000, kind="retrieval"),
+}
+
+
+def lm_cells(skip_long: str | None) -> tuple:
+    cells = []
+    for name, m in LM_SHAPES.items():
+        meta = dict(m)
+        kind = meta.pop("kind")
+        skip = skip_long if name == "long_500k" else None
+        cells.append(ShapeCell(name, kind, meta, skip))
+    return tuple(cells)
+
+
+def gnn_cells() -> tuple:
+    out = []
+    for name, m in GNN_SHAPES.items():
+        meta = dict(m)
+        kind = meta.pop("kind")
+        out.append(ShapeCell(name, kind, meta))
+    return tuple(out)
+
+
+def recsys_cells() -> tuple:
+    out = []
+    for name, m in RECSYS_SHAPES.items():
+        meta = dict(m)
+        kind = meta.pop("kind")
+        out.append(ShapeCell(name, kind, meta))
+    return tuple(out)
+
+
+# --------------------------------------------------------------------------
+# input specs + concrete batches
+# --------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), jnp.dtype(dtype))
+
+
+def _pad32(n: int) -> int:
+    """Round up to a multiple of 32 (pod×data) so DP sharding divides.
+    Production data pipelines pad ragged graph arrays the same way."""
+    return ((int(n) + 31) // 32) * 32
+
+
+def _scale_meta(cell: ShapeCell, smoke: bool) -> dict:
+    """Smoke tests reuse the same cell kinds at toy sizes."""
+    m = dict(cell.meta)
+    if not smoke:
+        return m
+    if "seq_len" in m:
+        m["seq_len"] = 64
+        m["global_batch"] = 2
+    if "n_nodes" in m and "d_feat" in m:
+        m["n_nodes"] = min(m["n_nodes"], 64)
+        m["n_edges"] = min(m["n_edges"], 256)
+        m["d_feat"] = min(m["d_feat"], 16)
+        m["n_classes"] = min(m.get("n_classes", 4), 4)
+    if "batch_nodes" in m:
+        m["batch_nodes"] = 8
+        m["fanout"] = (3, 2)
+        m["d_feat"] = 16
+        m["n_classes"] = 4
+    if "batch" in m:
+        m["batch"] = min(m["batch"], 8)
+    if "n_candidates" in m:
+        m["n_candidates"] = 128
+    return m
+
+
+def gnn_block_sizes(batch_nodes: int, fanout: tuple) -> list:
+    """Vertex-set sizes per layer: L0 = seeds, Lk+1 = Lk·(fanout_k + 1)."""
+    sizes = [batch_nodes]
+    for f in fanout:
+        sizes.append(sizes[-1] * (f + 1))
+    return sizes
+
+
+def input_specs(arch: ArchDef, cell: ShapeCell, cfg, smoke: bool = False) -> dict:
+    m = _scale_meta(cell, smoke)
+    fam = arch.family
+    if fam == "lm":
+        B, S = m["global_batch"], m["seq_len"]
+        if cell.kind == "train":
+            return {"tokens": _sds((B, S), jnp.int32), "labels": _sds((B, S), jnp.int32)}
+        if cell.kind == "prefill":
+            return {"tokens": _sds((B, S), jnp.int32)}
+        if cell.kind == "decode":
+            cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+            return {
+                "cache": jax.tree.map(lambda x: _sds(x.shape, x.dtype), cache),
+                "tokens": _sds((B,), jnp.int32),
+                "cur_len": _sds((), jnp.int32),
+            }
+    if fam == "gnn":
+        if cell.kind == "train":
+            N, E2 = (m["n_nodes"], 2 * m["n_edges"]) if smoke else (
+                _pad32(m["n_nodes"]), _pad32(2 * m["n_edges"])
+            )
+            if getattr(cfg, "partition_parallel", False):
+                # §Perf B1: halo-exchange layout (shapes from the partitioner)
+                ms = cfg.n_shards
+                n_loc = (N + ms - 1) // ms + 1
+                e_loc = (E2 + ms - 1) // ms
+                b = max(int(cfg.boundary_frac * n_loc), 1)
+                h = 2 * b
+                return {
+                    "node_feat": _sds((ms, n_loc, m["d_feat"]), jnp.float32),
+                    "labels": _sds((ms, n_loc), jnp.int32),
+                    "label_mask": _sds((ms, n_loc), jnp.bool_),
+                    "edge_index": _sds((ms, e_loc, 2), jnp.int32),
+                    "boundary_index": _sds((ms, b), jnp.int32),
+                    "halo_flat": _sds((ms, h), jnp.int32),
+                }
+            spec = {
+                "node_feat": _sds((N, m["d_feat"]), jnp.float32),
+                "edge_index": _sds((E2, 2), jnp.int32),
+                "labels": _sds((N,), jnp.int32),
+            }
+            if cfg.kind in ("schnet", "mace"):
+                spec["positions"] = _sds((N, 3), jnp.float32)
+            return spec
+        if cell.kind == "train_blocks":
+            sizes = gnn_block_sizes(m["batch_nodes"], tuple(m["fanout"]))
+            blocks = []
+            # outermost block first: maps L[k+1] → L[k]
+            for k in range(len(m["fanout"]) - 1, -1, -1):
+                blocks.append(
+                    {
+                        "nbr_index": _sds((sizes[k], m["fanout"][k]), jnp.int32),
+                        "mask": _sds((sizes[k], m["fanout"][k]), jnp.bool_),
+                        "dst_index": _sds((sizes[k],), jnp.int32),
+                    }
+                )
+            return {
+                "feats": _sds((sizes[-1], m["d_feat"]), jnp.float32),
+                "blocks": blocks,
+                "labels": _sds((m["batch_nodes"],), jnp.int32),
+            }
+        if cell.kind == "train_mol":
+            B, M, E = m["batch"], m["n_nodes"], m["n_edges"]
+            N = B * M
+            spec = {
+                "node_feat": _sds((N, m["d_feat"]), jnp.float32),
+                "edge_index": _sds((2 * E * B, 2), jnp.int32),
+                "positions": _sds((N, 3), jnp.float32),
+                "graph_id": _sds((N,), jnp.int32),
+                "node_mask": _sds((N,), jnp.float32),
+                "energy": _sds((B,), jnp.float32),
+            }
+            return spec
+    if fam == "recsys":
+        B = m["batch"]
+        spec = {
+            "dense": _sds((B, cfg.n_dense), jnp.float32),
+            "sparse": _sds((B, cfg.n_sparse), jnp.int32),
+        }
+        if cell.kind == "train":
+            spec["label"] = _sds((B,), jnp.float32)
+        if cell.kind == "retrieval":
+            spec["cand_emb"] = _sds((m["n_candidates"], cfg.retrieval_dim), jnp.float32)
+        return spec
+    if fam == "gnnpe_offline":
+        B, th = cfg.pairs_per_step, cfg.theta
+        return {
+            "center_labels": _sds((cfg.m, B), jnp.int32),
+            "leaf_labels": _sds((cfg.m, B, th), jnp.int32),
+            "leaf_mask": _sds((cfg.m, B, th), jnp.bool_),
+            "subset_mask": _sds((cfg.m, B, th), jnp.bool_),
+        }
+    if fam == "gnnpe_online":
+        dt = jnp.int8 if cfg.quantize_int8 else jnp.float32
+        return {
+            "q": _sds((cfg.n_queries, cfg.d_cat), dt),
+            "q0": _sds(
+                (cfg.n_queries,) if cfg.label_hash else (cfg.n_queries, cfg.d_label),
+                jnp.int32 if cfg.label_hash else jnp.float32,
+            ),
+        }
+    raise ValueError(f"no input_specs for {arch.name}/{cell.name}")
+
+
+def input_pspecs(arch: ArchDef, cell: ShapeCell, cfg) -> dict:
+    """PartitionSpec tree matching input_specs (production sharding)."""
+    fam = arch.family
+    if fam == "lm":
+        if cell.kind in ("train", "prefill"):
+            return {k: P(DP, None) for k in ("tokens", "labels") if cell.kind == "train" or k == "tokens"}
+        if cell.kind == "decode":
+            B = cell.meta["global_batch"]
+            batch_ax = DP if B > 1 else None
+            seq_ax = "model" if B > 1 else "data"  # long_500k: context-parallel KV
+            if cfg.use_mla:
+                cache = {"ckv": P(None, batch_ax, seq_ax, None), "krope": P(None, batch_ax, seq_ax, None)}
+            else:
+                cache = {
+                    "k": P(None, batch_ax, seq_ax, None, None),
+                    "v": P(None, batch_ax, seq_ax, None, None),
+                }
+            return {"cache": cache, "tokens": P(batch_ax), "cur_len": P()}
+    if fam == "gnn":
+        if cell.kind == "train" and getattr(cfg, "partition_parallel", False):
+            return {
+                "node_feat": P(DP, None, None),
+                "labels": P(DP, None),
+                "label_mask": P(DP, None),
+                "edge_index": P(DP, None, None),
+                "boundary_index": P(DP, None),
+                "halo_flat": P(DP, None),
+            }
+        if cell.kind in ("train", "train_mol"):
+            spec = {
+                "node_feat": P(DP, None),
+                "edge_index": P(DP, None),
+            }
+            if cell.kind == "train_mol":
+                spec.update(
+                    positions=P(DP, None), graph_id=P(DP), node_mask=P(DP), energy=P(DP)
+                )
+            else:
+                spec["labels"] = P(DP)
+                if cfg.kind in ("schnet", "mace"):
+                    spec["positions"] = P(DP, None)
+            return spec
+        if cell.kind == "train_blocks":
+            blocks = [
+                {"nbr_index": P(DP, None), "mask": P(DP, None), "dst_index": P(DP)}
+                for _ in cell.meta["fanout"]
+            ]
+            return {"feats": P(DP, None), "blocks": blocks, "labels": P(DP)}
+    if fam == "recsys":
+        spec = {"dense": P(DP, None), "sparse": P(DP, None)}
+        if cell.kind == "train":
+            spec["label"] = P(DP)
+        if cell.kind == "retrieval":
+            spec["cand_emb"] = P("model", None)
+            spec["dense"] = P(None, None)
+            spec["sparse"] = P(None, None)
+        return spec
+    if fam == "gnnpe_offline":
+        # partition models AND their pair batches shard over data axes
+        return {k: P(DP, *([None] * n)) for k, n in
+                [("center_labels", 1), ("leaf_labels", 2), ("leaf_mask", 2), ("subset_mask", 2)]}
+    if fam == "gnnpe_online":
+        q0 = P(None) if getattr(cfg, "label_hash", False) else P(None, None)
+        return {"q": P(None, None), "q0": q0}  # queries replicated
+    raise ValueError(f"no input_pspecs for {arch.name}/{cell.name}")
+
+
+def make_batch(arch: ArchDef, cell: ShapeCell, cfg, seed: int = 0, smoke: bool = True) -> dict:
+    """Concrete random arrays matching input_specs (smoke scale by default)."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(arch, cell, cfg, smoke=smoke)
+    m = _scale_meta(cell, smoke)
+
+    def concretize(path_name, s):
+        if s.dtype == jnp.int32:
+            hi = 4
+            if arch.family == "lm":
+                hi = cfg.vocab
+            elif arch.family == "recsys":
+                hi = cfg.vocab_per_field
+            elif path_name == "edge_index":
+                hi = m.get("n_nodes", 4) * m.get("batch", 1)
+            elif path_name == "labels":
+                hi = m.get("n_classes", 4)
+            elif path_name == "graph_id":
+                hi = m.get("batch", 1)
+            return rng.integers(0, max(hi, 1), s.shape).astype(np.int32)
+        if s.dtype == jnp.bool_:
+            return (rng.random(s.shape) < 0.8).astype(bool)
+        return rng.normal(size=s.shape).astype(s.dtype)
+
+    def walk(tree, name=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [walk(v, name) for v in tree]
+        return concretize(name, tree)
+
+    batch = walk(specs)
+    # family-specific fixups for semantic validity
+    if arch.family == "gnn":
+        if cell.kind == "train_blocks":
+            sizes = gnn_block_sizes(m["batch_nodes"], tuple(m["fanout"]))
+            rev = list(range(len(m["fanout"]) - 1, -1, -1))
+            for bi, k in enumerate(rev):
+                n_src = sizes[k + 1]
+                batch["blocks"][bi]["nbr_index"] = rng.integers(
+                    0, n_src, batch["blocks"][bi]["nbr_index"].shape
+                ).astype(np.int32)
+                batch["blocks"][bi]["dst_index"] = rng.integers(
+                    0, n_src, batch["blocks"][bi]["dst_index"].shape
+                ).astype(np.int32)
+        elif cell.kind == "train_mol":
+            B, M = m["batch"], m["n_nodes"]
+            batch["graph_id"] = np.repeat(np.arange(B, dtype=np.int32), M)
+            batch["node_mask"] = np.ones((B * M,), np.float32)
+            # edges within each graph
+            Eg = batch["edge_index"].shape[0] // B
+            per = rng.integers(0, M, (B, Eg, 2)).astype(np.int32)
+            per += (np.arange(B, dtype=np.int32) * M)[:, None, None]
+            batch["edge_index"] = per.reshape(-1, 2)
+        else:
+            batch["edge_index"] = rng.integers(
+                0, m["n_nodes"], batch["edge_index"].shape
+            ).astype(np.int32)
+    if arch.family == "lm" and cell.kind == "decode":
+        batch["cur_len"] = np.asarray(min(5, m["seq_len"] - 1), np.int32)
+    return batch
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+
+
+def init_params(arch: ArchDef, cfg, key):
+    if arch.family == "lm":
+        return init_lm_params(key, cfg)
+    if arch.family == "gnn":
+        return init_gnn_params(key, cfg)
+    if arch.family == "recsys":
+        return init_dcn_params(key, cfg)
+    if arch.family == "gnnpe_offline":
+        from ..core.encoder import EncoderConfig, make_encoder
+
+        enc = make_encoder(
+            EncoderConfig(
+                n_labels=cfg.n_labels, feat_dim=cfg.feat_dim, hidden_dim=cfg.hidden_dim,
+                heads=cfg.heads, out_dim=cfg.emb_dim, theta=cfg.theta,
+            )
+        )
+        keys = jax.random.split(key, cfg.m)
+        return jax.vmap(enc.init)(keys)  # stacked per-partition models
+    if arch.family == "gnnpe_online":
+        # serving state = the packed index arrays (paths sharded over data)
+        dt = jnp.int8 if cfg.quantize_int8 else jnp.float32
+        k1, k2 = jax.random.split(key)
+        if cfg.quantize_int8:
+            emb = jax.random.randint(k1, (cfg.n_paths, cfg.d_cat), 0, 127, jnp.int8)
+        else:
+            emb = jax.random.uniform(k1, (cfg.n_paths, cfg.d_cat), dt)
+        if cfg.label_hash:
+            emb0 = jax.random.randint(k2, (cfg.n_paths,), 0, 2**31 - 1, jnp.int32)
+        else:
+            emb0 = jax.random.uniform(k2, (cfg.n_paths, cfg.d_label), jnp.float32)
+        return {"emb": emb, "emb0": emb0}
+    raise ValueError(arch.family)
+
+
+def param_pspecs(arch: ArchDef, cfg, params):
+    if arch.family == "lm":
+        fsdp = getattr(cfg, "_fsdp", False) or (cfg.n_params() > 30e9)
+        return lm_param_specs(params, fsdp=fsdp)
+    if arch.family == "recsys":
+        return recsys_param_specs(params)
+    if arch.family == "gnnpe_offline":
+        # stacked partition models: leading m dim over the data axes
+        return jax.tree.map(lambda p: P(DP, *([None] * (p.ndim - 1))), params)
+    if arch.family == "gnnpe_online":
+        return jax.tree.map(lambda p: P(DP, *([None] * (p.ndim - 1))), params)  # paths sharded
+    return replicated_specs(params)
+
+
+def build_step(arch: ArchDef, cell: ShapeCell, cfg, mesh=None, opt_cfg: OptConfig = OptConfig()):
+    """Returns (step_fn, takes_opt_state: bool).
+
+    train kinds:  step(params, opt_state, batch) → (params, opt_state, metrics)
+    prefill:      step(params, batch) → logits
+    decode:       step(params, batch) → (logits, new_cache)
+    serve:        step(params, batch) → scores
+    retrieval:    step(params, batch) → (top_vals, top_idx)
+    """
+    fam = arch.family
+
+    def train_wrap(loss_fn, grad_accum: int = 1):
+        if grad_accum <= 1:
+
+            def step(params, opt_state, batch):
+                (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+                new_params, new_opt, om = adamw_update(grads, opt_state, params, opt_cfg)
+                return new_params, new_opt, {"loss": loss, **metrics, **om}
+
+            return step
+
+        def step(params, opt_state, batch):
+            # microbatched gradient accumulation: activation memory ÷ accum
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum) + x.shape[1:]), batch
+            )
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                g_acc, loss_acc = acc
+                (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (g_acc, loss_acc + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(body, (zero, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            new_params, new_opt, om = adamw_update(grads, opt_state, params, opt_cfg)
+            return new_params, new_opt, {"loss": loss_sum / grad_accum, **om}
+
+        return step
+
+    if fam == "lm":
+        if cell.kind == "train":
+            return train_wrap(lambda p, b: lm_loss(p, b, cfg, mesh), getattr(cfg, "grad_accum", 1)), True
+        if cell.kind == "prefill":
+            return (lambda params, batch: lm_forward(params, batch["tokens"], cfg, mesh)[0]), False
+        if cell.kind == "decode":
+            return (
+                lambda params, batch: decode_step(
+                    params, batch["cache"], batch["tokens"], batch["cur_len"], cfg, mesh
+                ),
+                False,
+            )
+    if fam == "gnn":
+        if cell.kind == "train":
+            if getattr(cfg, "partition_parallel", False):
+                from ..models.gnn_partition import partition_gnn_loss
+
+                return train_wrap(lambda p, b: partition_gnn_loss(p, cfg, b, mesh)), True
+            return train_wrap(lambda p, b: gnn_node_loss(p, cfg, b)), True
+        if cell.kind == "train_mol":
+            return train_wrap(lambda p, b: gnn_energy_loss(p, cfg, b)), True
+        if cell.kind == "train_blocks":
+
+            def blocks_loss(p, b):
+                logits = gnn_forward_blocks(p, cfg, b["feats"], b["blocks"])
+                logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+                nll = -jnp.take_along_axis(logp, b["labels"][:, None], axis=1)[:, 0]
+                return jnp.mean(nll), {}
+
+            return train_wrap(blocks_loss), True
+    if fam == "recsys":
+        if cell.kind == "train":
+            return train_wrap(lambda p, b: dcn_loss(p, b, cfg)), True
+        if cell.kind == "serve":
+            return (lambda params, batch: dcn_forward(params, batch["dense"], batch["sparse"], cfg)), False
+        if cell.kind == "retrieval":
+            return (
+                lambda params, batch: retrieval_scores(
+                    params, batch["dense"], batch["sparse"], batch["cand_emb"], cfg
+                ),
+                False,
+            )
+    if fam == "gnnpe_offline":
+        from ..core.encoder import EncoderConfig, make_encoder
+
+        enc = make_encoder(
+            EncoderConfig(
+                n_labels=cfg.n_labels, feat_dim=cfg.feat_dim, hidden_dim=cfg.hidden_dim,
+                heads=cfg.heads, out_dim=cfg.emb_dim, theta=cfg.theta,
+            )
+        )
+
+        def pair_loss(params, batch):
+            # vmapped over partition models: Eq. (7) hinge over each batch
+            def one(p, c, ll, lm, sub):
+                o_g = enc.embed_stars(p, c, ll, lm)
+                o_s = enc.embed_stars(p, c, ll, sub & lm)
+                v = jnp.maximum(0.0, o_s - o_g + 0.03)
+                return jnp.sum(v * v)
+
+            losses = jax.vmap(one)(
+                params, batch["center_labels"], batch["leaf_labels"],
+                batch["leaf_mask"], batch["subset_mask"],
+            )
+            return jnp.mean(losses), {}
+
+        return train_wrap(pair_loss), True
+    if fam == "gnnpe_online":
+
+        def scan_step(params, batch):
+            # fused Lemma 4.1 + 4.2 leaf scan: queries × sharded path index
+            emb = params["emb"]
+            emb0 = params["emb0"]
+
+            def one_query(args):
+                q, q0 = args
+                if cfg.quantize_int8:
+                    dom = jnp.all(q[None, :] <= emb, axis=-1)
+                else:
+                    dom = jnp.all(q[None, :] <= emb + 1e-6, axis=-1)
+                if cfg.label_hash:
+                    lab = emb0 == q0
+                else:
+                    lab = jnp.all(jnp.abs(emb0 - q0[None, :]) <= 1e-6, axis=-1)
+                return jnp.sum((dom & lab).astype(jnp.int32))
+
+            counts = jax.lax.map(one_query, (batch["q"], batch["q0"]))
+            return counts  # (Q,) candidate counts per query path
+
+        return scan_step, False
+    raise ValueError(f"no step for {arch.name}/{cell.name}")
+
+
+def opt_init(params):
+    return adamw_init(params)

@@ -1,0 +1,79 @@
+"""GNN-PE itself as a distributed architecture (extra dry-run cells,
+beyond the 40 assigned — DESIGN §5: both paper phases run on the mesh).
+
+* ``offline_pairs``  — one dominance-training step (Alg. 2) for all
+  partition GNNs at once: m=64 partition models train in parallel,
+  models + pair batches sharded over the data axes (the paper trains
+  partitions serially on one GPU and calls parallel training future
+  work — this cell is that future work).
+* ``online_scan``    — the online filtering hot loop at Youtube scale:
+  1e8 indexed paths × (1 + n_multi) concatenated embeddings, sharded
+  over the data axes; a batch of query paths is scanned with the fused
+  Lemma 4.1+4.2 predicate (the jnp analog of kernels/dominance_scan);
+  per-query candidate counts come back via one psum.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .base import ArchDef, ShapeCell
+
+
+@dataclasses.dataclass(frozen=True)
+class GnnPeOfflineConfig:
+    m: int = 64  # partition models (≈ paper: 500K vertices / 8K per partition)
+    theta: int = 10
+    n_labels: int = 500
+    feat_dim: int = 8
+    hidden_dim: int = 8
+    heads: int = 3
+    emb_dim: int = 2
+    pairs_per_step: int = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class GnnPeOnlineConfig:
+    n_paths: int = 100_000_000  # ≈ youtube: 1.13M vertices × deg 8.8, l=2
+    emb_dim: int = 2
+    path_length: int = 2
+    n_multi: int = 2
+    n_queries: int = 64
+    quantize_int8: bool = False  # §Perf hillclimb C1: conservative int8 index
+    label_hash: bool = False  # §Perf hillclimb C2: 4-byte label hash vs f32 o₀
+
+    @property
+    def d_cat(self) -> int:
+        # concat of main + n_multi dominance embeddings along features
+        return (self.path_length + 1) * self.emb_dim * (1 + self.n_multi)
+
+    @property
+    def d_label(self) -> int:
+        return (self.path_length + 1) * self.emb_dim
+
+
+def _offline(smoke: bool) -> GnnPeOfflineConfig:
+    if smoke:
+        return GnnPeOfflineConfig(m=2, theta=4, n_labels=8, pairs_per_step=64)
+    return GnnPeOfflineConfig()
+
+
+def _online(smoke: bool) -> GnnPeOnlineConfig:
+    if smoke:
+        return GnnPeOnlineConfig(n_paths=4096, n_queries=4)
+    return GnnPeOnlineConfig()
+
+
+GNNPE_OFFLINE = ArchDef(
+    "gnn-pe-offline",
+    "gnnpe_offline",
+    _offline,
+    (ShapeCell("offline_pairs", "gnnpe_offline", dict(kind="train")),),
+    source="this paper (Alg. 2), parallelized per §5 future work",
+)
+GNNPE_ONLINE = ArchDef(
+    "gnn-pe-online",
+    "gnnpe_online",
+    _online,
+    (ShapeCell("online_scan", "gnnpe_online", dict(kind="serve")),),
+    source="this paper (Alg. 3 leaf scan), yt-scale index",
+)

@@ -1,0 +1,95 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from .base import ArchDef, ShapeCell
+from .gnn_archs import GIN, GRAPHSAGE, MACE, SCHNET, with_shape_dims
+from .gnnpe_arch import GNNPE_OFFLINE, GNNPE_ONLINE
+from .lm_archs import COMMAND_R, DEEPSEEK, GEMMA3, MINITRON, QWEN3
+from .recsys_archs import DCN_V2
+
+_ARCHS = {
+    a.name: a
+    for a in [
+        MINITRON,
+        GEMMA3,
+        COMMAND_R,
+        DEEPSEEK,
+        QWEN3,
+        SCHNET,
+        GRAPHSAGE,
+        MACE,
+        GIN,
+        DCN_V2,
+    ]
+}
+# the paper's own phases as extra dry-run cells (beyond the 40 assigned)
+_EXTRA_ARCHS = {a.name: a for a in [GNNPE_OFFLINE, GNNPE_ONLINE]}
+
+
+def list_archs(include_extra: bool = False) -> list[str]:
+    out = list(_ARCHS)
+    if include_extra:
+        out += list(_EXTRA_ARCHS)
+    return out
+
+
+def get_arch(name: str) -> ArchDef:
+    if name in _ARCHS:
+        return _ARCHS[name]
+    if name in _EXTRA_ARCHS:
+        return _EXTRA_ARCHS[name]
+    raise KeyError(f"unknown arch {name!r}; available: {sorted(_ARCHS) + sorted(_EXTRA_ARCHS)}")
+
+
+def resolve_config(arch: ArchDef, cell: ShapeCell, smoke: bool = False):
+    """Model config for (arch, shape) — GNN dims come from the shape.
+
+    ``REPRO_OVERRIDES="remat_attention=true,loss_chunk=8192"`` patches any
+    matching config field (the §Perf hillclimb loop drives dry-run variants
+    through this hook)."""
+    cfg = arch.make_config(smoke)
+    if arch.family == "gnn":
+        from .base import _scale_meta
+
+        m = _scale_meta(cell, smoke)
+        d_in = m.get("d_feat", 16)
+        n_classes = m.get("n_classes", 1 if cell.kind == "train_mol" else 4)
+        cfg = with_shape_dims(cfg, d_in, n_classes)
+    overrides = os.environ.get("REPRO_OVERRIDES", "")
+    if overrides:
+        patch = {}
+        for kv in overrides.split(","):
+            k, _, v = kv.partition("=")
+            k = k.strip()
+            if not hasattr(cfg, k):
+                continue
+            cur = getattr(cfg, k)
+            if isinstance(cur, bool):
+                patch[k] = v.strip().lower() in ("1", "true", "yes")
+            elif isinstance(cur, int):
+                patch[k] = int(v)
+            elif isinstance(cur, float):
+                patch[k] = float(v)
+            else:
+                patch[k] = v
+        if patch:
+            cfg = dataclasses.replace(cfg, **patch)
+    return cfg
+
+
+def all_cells(include_skipped: bool = False, include_extra: bool = False):
+    """Every (arch, shape) cell in the assignment (40 total); extras are
+    the paper's own phases (gnn-pe-offline/online)."""
+    out = []
+    archs = dict(_ARCHS)
+    if include_extra:
+        archs.update(_EXTRA_ARCHS)
+    for name, arch in archs.items():
+        for cell in arch.shapes:
+            if cell.skip and not include_skipped:
+                continue
+            out.append((arch, cell))
+    return out

@@ -1,0 +1,166 @@
+"""GNN encoders for node dominance embedding (§3.1) — pure JAX.
+
+Two encoders:
+
+* ``GATEncoder`` — the paper's model: one GAT layer (K heads, masked
+  softmax attention over the star), sum readout, sigmoid FC head into
+  ``(0,1)^d``.  Dominance is *learned* (trained to zero hinge loss).
+* ``MonotoneEncoder`` — beyond-paper alternative: per-leaf non-negative
+  contributions summed then squashed by ``1 - exp(-z)``.  Dominance holds
+  *by construction* (adding leaves can only increase every coordinate),
+  so it needs no training and its offline phase is a single forward pass.
+
+Both depend only on (center label, multiset of leaf labels) → permutation
+invariant, so a query star embeds identically to its isomorphic data-star
+substructure (the property §3.2 relies on).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["EncoderConfig", "GATEncoder", "MonotoneEncoder", "make_encoder"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    n_labels: int
+    feat_dim: int = 8  # F  — label feature size
+    hidden_dim: int = 8  # F' — per-head hidden size
+    heads: int = 3  # K = 3 (paper default)
+    out_dim: int = 2  # d = 2 (paper default)
+    theta: int = 10  # degree threshold (paper default 10)
+    kind: str = "gat"  # "gat" | "monotone"
+
+
+def _leaky(x):
+    return jax.nn.leaky_relu(x, negative_slope=0.2)
+
+
+class _HashByConfig:
+    """jit treats ``self`` as a static arg — hash by config so encoder
+    instances with the same config share one compilation cache entry."""
+
+    cfg: EncoderConfig
+
+    def __hash__(self):
+        return hash((type(self).__name__, self.cfg))
+
+    def __eq__(self, other):
+        return type(other) is type(self) and other.cfg == self.cfg
+
+
+class GATEncoder(_HashByConfig):
+    """Paper's GNN (Fig. 2): GAT(K heads) → sum readout → sigmoid FC."""
+
+    def __init__(self, cfg: EncoderConfig):
+        self.cfg = cfg
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        k = jax.random.split(key, 5)
+        s = 1.0 / np.sqrt(cfg.feat_dim)
+        return {
+            "embed": jax.random.normal(k[0], (cfg.n_labels, cfg.feat_dim)) * 0.5,
+            "W": jax.random.normal(k[1], (cfg.heads, cfg.hidden_dim, cfg.feat_dim)) * s,
+            "a_src": jax.random.normal(k[2], (cfg.heads, cfg.hidden_dim)) * s,
+            "a_dst": jax.random.normal(k[3], (cfg.heads, cfg.hidden_dim)) * s,
+            "W_fc": jax.random.normal(k[4], (cfg.out_dim, cfg.heads * cfg.hidden_dim))
+            * (1.0 / np.sqrt(cfg.heads * cfg.hidden_dim)),
+            "b_fc": jnp.zeros((cfg.out_dim,)),
+        }
+
+    def _star_embed(self, params, center_label, leaf_labels, leaf_mask):
+        """Embed a single star (center + masked leaves) → (d,) in (0,1)."""
+        cfg = self.cfg
+        x_c = params["embed"][center_label]  # (F,)
+        x_l = params["embed"][leaf_labels]  # (θ, F)
+        # per-head projections
+        h_c = jnp.einsum("khf,f->kh", params["W"], x_c)  # (K, H)
+        h_l = jnp.einsum("khf,tf->kth", params["W"], x_l)  # (K, θ, H)
+        e_src_c = jnp.einsum("kh,kh->k", params["a_src"], h_c)  # (K,)
+        e_dst_c = jnp.einsum("kh,kh->k", params["a_dst"], h_c)
+        e_dst_l = jnp.einsum("kh,kth->kt", params["a_dst"], h_l)
+        e_src_l = jnp.einsum("kh,kth->kt", params["a_src"], h_l)
+        neg = jnp.asarray(-1e9, h_c.dtype)
+        # --- center update: attends to {self} ∪ leaves -------------------
+        sc_self = _leaky(e_src_c + e_dst_c)[:, None]  # (K,1)
+        sc_leaf = jnp.where(leaf_mask[None, :], _leaky(e_src_c[:, None] + e_dst_l), neg)
+        sc = jnp.concatenate([sc_self, sc_leaf], axis=1)  # (K, 1+θ)
+        att_c = jax.nn.softmax(sc, axis=1)
+        vals = jnp.concatenate([h_c[:, None, :], h_l], axis=1)  # (K, 1+θ, H)
+        x_c_new = jax.nn.relu(jnp.einsum("kt,kth->kh", att_c, vals))  # (K, H)
+        # --- leaf updates: each leaf attends to {self, center} -----------
+        sl_self = _leaky(e_src_l + e_dst_l)  # (K, θ)
+        sl_cent = _leaky(e_src_l + e_dst_c[:, None])  # (K, θ)
+        sl = jnp.stack([sl_self, sl_cent], axis=-1)  # (K, θ, 2)
+        att_l = jax.nn.softmax(sl, axis=-1)
+        x_l_new = jax.nn.relu(
+            att_l[..., 0:1] * h_l + att_l[..., 1:2] * h_c[:, None, :]
+        )  # (K, θ, H)
+        # --- readout: sum over vertices in the star (Eq. 5) --------------
+        x_l_sum = jnp.einsum("kth,t->kh", x_l_new, leaf_mask.astype(x_l_new.dtype))
+        y = (x_c_new + x_l_sum).reshape(-1)  # (K·H,) concat-of-heads
+        # --- sigmoid FC head (Eq. 6) --------------------------------------
+        return jax.nn.sigmoid(params["W_fc"] @ y + params["b_fc"])
+
+    @partial(jax.jit, static_argnums=0)
+    def embed_stars(self, params, center_labels, leaf_labels, leaf_mask):
+        """(n,) , (n,θ), (n,θ) → (n, d) — vmapped star embedding."""
+        return jax.vmap(lambda c, ll, lm: self._star_embed(params, c, ll, lm))(
+            center_labels, leaf_labels, leaf_mask
+        )
+
+    @partial(jax.jit, static_argnums=0)
+    def embed_isolated(self, params, labels):
+        """Label embedding o₀(v): star with no leaves (§4.1)."""
+        theta = self.cfg.theta
+        n = labels.shape[0]
+        ll = jnp.zeros((n, theta), jnp.int32)
+        lm = jnp.zeros((n, theta), bool)
+        return self.embed_stars(params, labels, ll, lm)
+
+
+class MonotoneEncoder(_HashByConfig):
+    """Constructively dominance-correct encoder (beyond-paper).
+
+    o(star)[t] = 1 − exp(−(c_t(L(center)) + Σ_leaves φ_t(L(leaf), L(center))))
+    with c, φ ≥ 0 fixed pseudo-random tables.  Subset of leaves ⇒ smaller sum
+    ⇒ coordinate-wise dominated output.  Zero training cost.
+    """
+
+    def __init__(self, cfg: EncoderConfig):
+        self.cfg = cfg
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        # Exponential-ish spread keeps coordinates informative across labels.
+        c = jax.random.uniform(k1, (cfg.n_labels, cfg.out_dim), minval=0.05, maxval=2.5)
+        phi = jax.random.uniform(
+            k2, (cfg.n_labels, cfg.n_labels, cfg.out_dim), minval=0.02, maxval=1.2
+        )
+        return {"c": c, "phi": phi}
+
+    @partial(jax.jit, static_argnums=0)
+    def embed_stars(self, params, center_labels, leaf_labels, leaf_mask):
+        z0 = params["c"][center_labels]  # (n, d)
+        contrib = params["phi"][leaf_labels, center_labels[:, None]]  # (n, θ, d)
+        z = z0 + jnp.einsum("ntd,nt->nd", contrib, leaf_mask.astype(contrib.dtype))
+        return 1.0 - jnp.exp(-z)
+
+    @partial(jax.jit, static_argnums=0)
+    def embed_isolated(self, params, labels):
+        return 1.0 - jnp.exp(-params["c"][labels])
+
+
+def make_encoder(cfg: EncoderConfig):
+    if cfg.kind == "gat":
+        return GATEncoder(cfg)
+    if cfg.kind == "monotone":
+        return MonotoneEncoder(cfg)
+    raise ValueError(f"unknown encoder kind: {cfg.kind}")

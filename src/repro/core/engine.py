@@ -1,0 +1,353 @@
+"""GNN-PE engine — the paper's Algorithm 1 end to end.
+
+Offline:  partition → per-partition dominance GNNs (main + n multi-GNNs
+over randomized labels) → node/label embeddings → path enumeration →
+packed block indexes.
+
+Online:   cost-model query plan → per-partition query embeddings →
+index retrieval (Lemmas 4.1–4.4) → multi-way join → exact refinement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from ..graphs import Graph, Partitioning, expanded_partition, partition_graph
+from .encoder import EncoderConfig, make_encoder
+from .index import PackedIndex, build_index, query_index
+from .matcher import match_from_candidates
+from .paths import concat_path_embeddings, enumerate_paths
+from .planner import QueryPlan, plan_query
+from .stars import build_pair_dataset, build_star_tensors
+from .training import TrainConfig, train_dominance
+
+__all__ = ["GnnPeConfig", "PartitionModel", "GnnPeEngine", "QueryStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GnnPeConfig:
+    path_length: int = 2  # l  (paper default 2)
+    emb_dim: int = 2  # d  (paper default 2)
+    n_multi: int = 2  # n  multi-GNNs (paper default 2)
+    theta: int = 10  # degree threshold (paper default 10)
+    n_partitions: int = 2  # m
+    encoder: str = "gat"  # "gat" (paper) | "monotone" (beyond-paper)
+    feat_dim: int = 8
+    hidden_dim: int = 8
+    heads: int = 3  # K = 3 (paper default)
+    block_size: int = 128
+    index_fanout: int = 16
+    plan_strategy: str = "aip"
+    plan_weight: str = "deg"
+    induced: bool = False
+    quantize_index: bool = False  # §Perf C1/C2: int8 + label-hash leaf sidecar
+    seed: int = 0
+    train: TrainConfig = dataclasses.field(default_factory=TrainConfig)
+
+
+@dataclasses.dataclass
+class PartitionModel:
+    """Trained artifacts for one partition G_j."""
+
+    members: np.ndarray  # vertices of G_j
+    vertex_set: np.ndarray  # l-hop expanded vertex set (embedding support)
+    params: dict  # main GNN params
+    multi_params: list  # params of the n extra GNNs
+    label_perms: np.ndarray  # (n, n_labels) randomized label maps
+    node_emb: np.ndarray  # (n_vertices_G, d) — rows valid on vertex_set
+    node_emb0: np.ndarray  # (n_vertices_G, d)
+    node_emb_multi: np.ndarray  # (n, n_vertices_G, d)
+    index: PackedIndex
+    train_epochs: int = 0
+    n_fallback: int = 0
+
+
+@dataclasses.dataclass
+class QueryStats:
+    plan: QueryPlan | None = None
+    n_candidates: dict = dataclasses.field(default_factory=dict)
+    total_paths: int = 0
+    candidate_paths: int = 0
+    pruning_power: float = 0.0
+    filter_time: float = 0.0
+    join_time: float = 0.0
+    n_matches: int = 0
+
+
+class GnnPeEngine:
+    def __init__(self, cfg: GnnPeConfig):
+        self.cfg = cfg
+        self.graph: Graph | None = None
+        self.partitioning: Partitioning | None = None
+        self.models: list[PartitionModel] = []
+        self.n_labels: int = 0
+        self.offline_stats: dict = {}
+
+    # ------------------------------------------------------------------
+    # Offline pre-computation (Alg. 1 lines 1-5)
+    # ------------------------------------------------------------------
+    def build(self, g: Graph) -> "GnnPeEngine":
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        self.graph = g
+        self.n_labels = int(g.labels.max()) + 1 if g.n_vertices else 1
+        self.partitioning = partition_graph(g, cfg.n_partitions, seed=cfg.seed)
+        rng = np.random.default_rng(cfg.seed)
+        # randomized label maps shared across partitions (query side needs them)
+        self.label_perms = np.stack(
+            [rng.permutation(self.n_labels) for _ in range(cfg.n_multi)]
+        ) if cfg.n_multi else np.zeros((0, self.n_labels), np.int64)
+        train_time = 0.0
+        embed_time = 0.0
+        index_time = 0.0
+        self.models = []
+        for j in range(self.partitioning.n_parts):
+            members = self.partitioning.members(j)
+            vset = expanded_partition(g, self.partitioning, j, cfg.path_length)
+            if vset.size == 0:
+                continue
+            ecfg = self._encoder_cfg()
+            # ---- train main + multi GNNs over the expanded vertex set ----
+            t1 = time.perf_counter()
+            stars = build_star_tensors(g, vset, cfg.theta)
+            pairs = build_pair_dataset(stars, rng=np.random.default_rng(cfg.seed + j))
+            res = train_dominance(ecfg, stars, pairs, cfg.train)
+            multi_params = []
+            multi_res = []
+            for i in range(cfg.n_multi):
+                relab = self.label_perms[i][g.labels].astype(np.int32)
+                stars_i = dataclasses.replace(
+                    stars,
+                    center_labels=relab[vset],
+                    leaf_labels=self._relabel_leaves(stars.leaf_labels, stars.leaf_mask, i),
+                )
+                tcfg_i = dataclasses.replace(cfg.train, seed=cfg.train.seed + 101 + i)
+                res_i = train_dominance(ecfg, stars_i, pairs, tcfg_i)
+                multi_params.append(res_i.params)
+                multi_res.append(res_i)
+            train_time += time.perf_counter() - t1
+            # ---- node embeddings (with safe fallbacks) --------------------
+            t2 = time.perf_counter()
+            node_emb, node_emb0 = self._node_embeddings(
+                g, vset, stars, res.params, res.fallback_vertices
+            )
+            node_emb_multi = np.zeros((cfg.n_multi, g.n_vertices, cfg.emb_dim), np.float32)
+            for i in range(cfg.n_multi):
+                stars_i = dataclasses.replace(
+                    stars,
+                    center_labels=self.label_perms[i][g.labels][vset].astype(np.int32),
+                    leaf_labels=self._relabel_leaves(stars.leaf_labels, stars.leaf_mask, i),
+                )
+                emb_i, _ = self._node_embeddings(
+                    g, vset, stars_i, multi_params[i], multi_res[i].fallback_vertices
+                )
+                node_emb_multi[i] = emb_i
+            embed_time += time.perf_counter() - t2
+            # ---- paths + index -------------------------------------------
+            t3 = time.perf_counter()
+            paths = enumerate_paths(g, members, cfg.path_length)
+            emb = concat_path_embeddings(paths, node_emb)
+            emb0 = concat_path_embeddings(paths, node_emb0)
+            emb_multi = (
+                np.stack([concat_path_embeddings(paths, node_emb_multi[i]) for i in range(cfg.n_multi)])
+                if cfg.n_multi
+                else None
+            )
+            index = build_index(
+                paths, emb, emb0, emb_multi,
+                block_size=cfg.block_size, fanout=cfg.index_fanout,
+                quantize=cfg.quantize_index,
+                path_labels=g.labels[paths] if cfg.quantize_index else None,
+            )
+            index_time += time.perf_counter() - t3
+            self.models.append(
+                PartitionModel(
+                    members=members,
+                    vertex_set=vset,
+                    params=res.params,
+                    multi_params=multi_params,
+                    label_perms=self.label_perms,
+                    node_emb=node_emb,
+                    node_emb0=node_emb0,
+                    node_emb_multi=node_emb_multi,
+                    index=index,
+                    train_epochs=res.epochs,
+                    n_fallback=len(res.fallback_vertices),
+                )
+            )
+        self.offline_stats = {
+            "total_time": time.perf_counter() - t0,
+            "train_time": train_time,
+            "embed_time": embed_time,
+            "index_time": index_time,
+            "n_paths": int(sum(m.index.n_paths for m in self.models)),
+            "index_bytes": int(sum(m.index.nbytes() for m in self.models)),
+            "edge_cut": int(self.partitioning.edge_cut(g)),
+        }
+        return self
+
+    def _encoder_cfg(self) -> EncoderConfig:
+        cfg = self.cfg
+        return EncoderConfig(
+            n_labels=self.n_labels,
+            feat_dim=cfg.feat_dim,
+            hidden_dim=cfg.hidden_dim,
+            heads=cfg.heads,
+            out_dim=cfg.emb_dim,
+            theta=cfg.theta,
+            kind=cfg.encoder,
+        )
+
+    def _relabel_leaves(self, leaf_labels: np.ndarray, leaf_mask: np.ndarray, i: int) -> np.ndarray:
+        out = self.label_perms[i][leaf_labels].astype(np.int32)
+        return np.where(leaf_mask, out, 0)
+
+    def _node_embeddings(self, g, vset, stars, params, fallback_vertices):
+        """Embed every vertex of the expanded set; all-ones for overflow/fallback."""
+        cfg = self.cfg
+        enc = make_encoder(self._encoder_cfg())
+        o = np.asarray(
+            enc.embed_stars(
+                params,
+                np.asarray(stars.center_labels),
+                np.asarray(stars.leaf_labels),
+                np.asarray(stars.leaf_mask),
+            )
+        ).astype(np.float32)
+        o0 = np.asarray(enc.embed_isolated(params, np.asarray(stars.center_labels))).astype(
+            np.float32
+        )
+        # paper: high-degree → all-ones; ours: unverified vertices too
+        o[stars.overflow] = 1.0
+        if len(fallback_vertices):
+            o[np.asarray(fallback_vertices, dtype=np.int64)] = 1.0
+        node_emb = np.zeros((g.n_vertices, cfg.emb_dim), np.float32)
+        node_emb0 = np.zeros((g.n_vertices, cfg.emb_dim), np.float32)
+        node_emb[vset] = o
+        node_emb0[vset] = o0
+        return node_emb, node_emb0
+
+    # ------------------------------------------------------------------
+    # Online matching (Alg. 1 lines 6-11, Alg. 3)
+    # ------------------------------------------------------------------
+    def _query_node_embeddings(self, q: Graph, model: PartitionModel):
+        """Embed query stars with partition j's GNNs (query-side safety:
+        overflow query vertices embed to 0⃗ so they prune nothing)."""
+        cfg = self.cfg
+        enc = make_encoder(self._encoder_cfg())
+        stars = build_star_tensors(q, np.arange(q.n_vertices), cfg.theta)
+        o = np.asarray(
+            enc.embed_stars(
+                model.params,
+                np.asarray(stars.center_labels),
+                np.asarray(stars.leaf_labels),
+                np.asarray(stars.leaf_mask),
+            )
+        ).astype(np.float32)
+        o0 = np.asarray(
+            enc.embed_isolated(model.params, np.asarray(stars.center_labels))
+        ).astype(np.float32)
+        o[stars.overflow] = 0.0
+        o_multi = np.zeros((cfg.n_multi, q.n_vertices, cfg.emb_dim), np.float32)
+        for i in range(cfg.n_multi):
+            relab_c = self.label_perms[i][q.labels][np.arange(q.n_vertices)].astype(np.int32)
+            relab_l = self._relabel_leaves(stars.leaf_labels, stars.leaf_mask, i)
+            oi = np.asarray(
+                enc.embed_stars(
+                    model.multi_params[i], relab_c, np.asarray(relab_l), np.asarray(stars.leaf_mask)
+                )
+            ).astype(np.float32)
+            oi[stars.overflow] = 0.0
+            o_multi[i] = oi
+        return o, o0, o_multi
+
+    def match(self, q: Graph, return_stats: bool = False):
+        """Exact subgraph matching of query q (Alg. 3)."""
+        assert self.graph is not None, "call build() first"
+        cfg = self.cfg
+        stats = QueryStats()
+        t0 = time.perf_counter()
+        # per-partition query embeddings (needed by both DR planning and retrieval)
+        q_embs = [self._query_node_embeddings(q, m) for m in self.models]
+        probe_memo: dict = {}
+
+        def _retrieve(mi: int, p: tuple) -> np.ndarray:
+            key = (mi, p)
+            if key in probe_memo:
+                return probe_memo[key]
+            model = self.models[mi]
+            pv = np.asarray(p, dtype=np.int64)
+            qo, qo0, qom = q_embs[mi]
+            q_emb = qo[pv].reshape(-1)
+            q_emb0 = qo0[pv].reshape(-1)
+            q_multi = qom[:, pv].reshape(cfg.n_multi, -1) if cfg.n_multi else None
+            qh = None
+            if cfg.quantize_index:
+                from .index import hash_labels
+
+                qh = int(hash_labels(q.labels[pv][None, :])[0])
+            rows = query_index(model.index, q_emb, q_emb0, q_multi, q_label_hash=qh)
+            probe_memo[key] = rows
+            return rows
+
+        weight_fn = None
+        if cfg.plan_weight == "dr":
+            # paper §5.1 alternative: w(p_q) = |DR(o(p_q))| — candidate counts
+            # from an index probe (memoized; reused by the retrieval below)
+            def weight_fn(p):
+                return float(
+                    sum(
+                        _retrieve(mi, p).size
+                        for mi in range(len(self.models))
+                        if self.models[mi].index.n_paths
+                        and len(p) == self.models[mi].index.paths.shape[1]
+                    )
+                )
+
+        plan = plan_query(
+            q,
+            cfg.path_length,
+            strategy=cfg.plan_strategy,
+            weight=cfg.plan_weight,
+            weight_fn=weight_fn,
+            seed=cfg.seed,
+        )
+        stats.plan = plan
+        # candidate retrieval per partition, per query path
+        candidates = [[] for _ in plan.paths]
+        total_paths = 0
+        for mi, model in enumerate(self.models):
+            if model.index.n_paths == 0:
+                continue
+            total_paths += model.index.n_paths
+            for pi, p in enumerate(plan.paths):
+                if len(p) != model.index.paths.shape[1]:
+                    continue  # length-mismatched fallback path
+                rows = _retrieve(mi, p)
+                if rows.size:
+                    candidates[pi].append(model.index.paths[rows])
+        cand_arrays = []
+        cand_total = 0
+        for pi, parts in enumerate(candidates):
+            if parts:
+                arr = np.concatenate(parts, axis=0)
+            else:
+                arr = np.zeros((0, len(plan.paths[pi])), np.int32)
+            cand_arrays.append(arr)
+            cand_total += arr.shape[0]
+            stats.n_candidates[plan.paths[pi]] = int(arr.shape[0])
+        stats.filter_time = time.perf_counter() - t0
+        stats.total_paths = total_paths * max(len(plan.paths), 1)
+        stats.candidate_paths = cand_total
+        stats.pruning_power = 1.0 - cand_total / max(stats.total_paths, 1)
+        # join + refine
+        t1 = time.perf_counter()
+        matches = match_from_candidates(self.graph, q, plan.paths, cand_arrays, induced=cfg.induced)
+        stats.join_time = time.perf_counter() - t1
+        stats.n_matches = len(matches)
+        if return_stats:
+            return matches, stats
+        return matches

@@ -1,0 +1,175 @@
+"""Candidate assembly + refinement (paper Alg. 3 lines 29-30, §4.4).
+
+Candidates per query path come back from the packed indexes; this module
+joins them into full embeddings and verifies exactly.  The paper uses a
+multi-way hash join; we use a vectorized sort/merge-style join over numpy
+key arrays (hash tables don't vectorize; sort-merge does — see DESIGN §6).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..graphs import Graph
+
+__all__ = ["join_candidates", "refine", "match_from_candidates"]
+
+
+def _join_pair(
+    table: np.ndarray,
+    table_cols: list[int],
+    cand: np.ndarray,
+    cand_cols: list[int],
+) -> tuple[np.ndarray, list[int]]:
+    """Join a partial-assignment table with one path's candidate rows.
+
+    table: (R, len(table_cols)) data-vertex assignments for query vertices
+    ``table_cols``; cand: (C, len(cand_cols)) ditto.  Returns the merged
+    table over the union of columns with key equality on shared columns
+    and injectivity on the new columns.
+    """
+    shared = [c for c in cand_cols if c in table_cols]
+    new_cols = [c for c in cand_cols if c not in table_cols]
+    t_idx = [table_cols.index(c) for c in shared]
+    c_idx = [cand_cols.index(c) for c in shared]
+    n_idx = [cand_cols.index(c) for c in new_cols]
+
+    if table.shape[0] == 0 or cand.shape[0] == 0:
+        return np.zeros((0, len(table_cols) + len(new_cols)), np.int32), table_cols + new_cols
+
+    if not shared:  # cartesian (paper joins connected paths, so rare)
+        r = np.repeat(np.arange(table.shape[0]), cand.shape[0])
+        c = np.tile(np.arange(cand.shape[0]), table.shape[0])
+    else:
+        # sort-merge join on the shared-column key
+        tkey = table[:, t_idx]
+        ckey = cand[:, c_idx]
+        # encode multi-column keys into a single int64 (vertex ids < 2^31)
+        def enc(a: np.ndarray) -> np.ndarray:
+            k = a[:, 0].astype(np.int64)
+            for j in range(1, a.shape[1]):
+                k = k * np.int64(2**31) + a[:, j].astype(np.int64)
+            return k
+
+        tk, ck = enc(tkey), enc(ckey)
+        order_t = np.argsort(tk, kind="stable")
+        order_c = np.argsort(ck, kind="stable")
+        tk_s, ck_s = tk[order_t], ck[order_c]
+        # for each table row, locate the run of equal candidate keys
+        lo = np.searchsorted(ck_s, tk_s, side="left")
+        hi = np.searchsorted(ck_s, tk_s, side="right")
+        reps = hi - lo
+        r_s = np.repeat(np.arange(tk_s.shape[0]), reps)
+        cum = np.cumsum(reps)
+        starts = cum - reps
+        pos = np.arange(int(cum[-1]) if reps.size else 0) - np.repeat(starts, reps)
+        c_s = np.repeat(lo, reps) + pos
+        r = order_t[r_s]
+        c = order_c[c_s]
+
+    merged = np.concatenate([table[r], cand[c][:, n_idx]], axis=1)
+    # injectivity: new columns must not collide with existing assignments
+    if n_idx:
+        old_part = merged[:, : len(table_cols)]
+        new_part = merged[:, len(table_cols):]
+        ok = np.ones(merged.shape[0], bool)
+        for j in range(new_part.shape[1]):
+            ok &= ~np.any(old_part == new_part[:, j : j + 1], axis=1)
+            for j2 in range(j + 1, new_part.shape[1]):
+                ok &= new_part[:, j] != new_part[:, j2]
+        merged = merged[ok]
+    # dedup rows (different candidate paths can induce the same assignment)
+    if merged.shape[0] > 1:
+        merged = np.unique(merged, axis=0)
+    return merged.astype(np.int32), table_cols + new_cols
+
+
+def join_candidates(
+    plan_paths: list,
+    candidates: list,
+) -> tuple[np.ndarray, list[int]]:
+    """Multi-way join of per-path candidates (smallest-first order)."""
+    order = np.argsort([c.shape[0] for c in candidates], kind="stable")
+    first = int(order[0])
+    table = np.unique(candidates[first], axis=0).astype(np.int32)
+    cols = list(plan_paths[first])
+    # a path may repeat no vertices (simple), so cols are distinct per path
+    # injectivity inside one path row:
+    ok = np.ones(table.shape[0], bool)
+    for a in range(table.shape[1]):
+        for b in range(a + 1, table.shape[1]):
+            ok &= table[:, a] != table[:, b]
+    table = table[ok]
+    remaining = [int(i) for i in order[1:]]
+    # prefer joining paths that share columns with the current table
+    while remaining:
+        nxt = None
+        for i in remaining:
+            if set(plan_paths[i]) & set(cols):
+                nxt = i
+                break
+        if nxt is None:
+            nxt = remaining[0]
+        remaining.remove(nxt)
+        table, cols = _join_pair(table, cols, candidates[nxt], list(plan_paths[nxt]))
+        if table.shape[0] == 0:
+            break
+    return table, cols
+
+
+def refine(
+    g: Graph,
+    q: Graph,
+    table: np.ndarray,
+    cols: list[int],
+    induced: bool = False,
+) -> list[tuple[int, ...]]:
+    """Exact verification of every assembled assignment (zero false positives)."""
+    if table.shape[0] == 0:
+        return []
+    nq = q.n_vertices
+    assert sorted(cols) == list(range(nq)), f"join must cover all query vertices, got {cols}"
+    inv = np.argsort(np.asarray(cols))
+    rows = table[:, inv]  # column j = data vertex for query vertex j
+    ok = np.ones(rows.shape[0], bool)
+    # label check (paths already enforce labels, but be defensive)
+    for u in range(nq):
+        ok &= g.labels[rows[:, u]] == q.labels[u]
+    # every query edge must exist in G
+    qe = q.edge_array()
+    for u, v in qe:
+        du = rows[:, u]
+        dv = rows[:, v]
+        # CSR membership test, vectorized
+        lo = g.offsets[du]
+        hi = g.offsets[du + 1]
+        found = np.zeros(rows.shape[0], bool)
+        # binary search per row over the CSR slice
+        for i in np.nonzero(ok)[0]:
+            seg = g.nbrs[lo[i] : hi[i]]
+            j = np.searchsorted(seg, dv[i])
+            found[i] = j < seg.shape[0] and seg[j] == dv[i]
+        ok &= found
+    if induced:
+        # non-edges of q must be non-edges of G
+        adj = q.adjacency_sets()
+        for u in range(nq):
+            for v in range(u + 1, nq):
+                if v in adj[u]:
+                    continue
+                for i in np.nonzero(ok)[0]:
+                    seg = g.nbrs[g.offsets[rows[i, u]] : g.offsets[rows[i, u] + 1]]
+                    j = np.searchsorted(seg, rows[i, v])
+                    if j < seg.shape[0] and seg[j] == rows[i, v]:
+                        ok[i] = False
+    return [tuple(int(x) for x in r) for r in rows[ok]]
+
+
+def match_from_candidates(
+    g: Graph,
+    q: Graph,
+    plan_paths: list,
+    candidates: list,
+    induced: bool = False,
+) -> list[tuple[int, ...]]:
+    table, cols = join_candidates(plan_paths, candidates)
+    return refine(g, q, table, cols, induced=induced)

@@ -1,0 +1,54 @@
+"""Path enumeration + path dominance embeddings (§3.3).
+
+Data paths are *directed simple walks* of length ``l`` (l+1 distinct
+vertices) rooted at partition members; both directions of an undirected
+path are enumerated so query paths match positionally.  Enumeration is
+vectorized frontier expansion over the CSR arrays — no Python recursion.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..graphs import Graph
+
+__all__ = ["enumerate_paths", "concat_path_embeddings"]
+
+
+def enumerate_paths(
+    g: Graph,
+    roots: np.ndarray,
+    length: int,
+    max_paths: int | None = None,
+) -> np.ndarray:
+    """All simple paths (v_0, …, v_l) with v_0 ∈ roots → (P, l+1) int32."""
+    roots = np.asarray(roots, dtype=np.int32)
+    paths = roots[:, None]  # (P, 1)
+    if length == 0:
+        return paths
+    deg = g.degrees
+    for _step in range(length):
+        ends = paths[:, -1]
+        reps = deg[ends]
+        if reps.sum() == 0:
+            return np.zeros((0, length + 1), dtype=np.int32)
+        base = np.repeat(paths, reps, axis=0)
+        # gather each end's neighbor list contiguously (vectorized ragged iota)
+        starts = g.offsets[ends]
+        cum = np.cumsum(reps)
+        grp_start = cum - reps
+        pos = np.arange(int(cum[-1])) - np.repeat(grp_start, reps)
+        idx = np.repeat(starts, reps) + pos
+        nxt = g.nbrs[idx]
+        cand = np.concatenate([base, nxt[:, None].astype(np.int32)], axis=1)
+        # simple-path filter: new vertex must not already appear
+        fresh = np.all(cand[:, :-1] != cand[:, -1:], axis=1)
+        paths = cand[fresh]
+        if max_paths is not None and paths.shape[0] > max_paths:
+            paths = paths[:max_paths]
+    return paths.astype(np.int32)
+
+
+def concat_path_embeddings(paths: np.ndarray, node_emb: np.ndarray) -> np.ndarray:
+    """Eq. (8): o(p) = ‖_{v∈p} o(v) → (P, (l+1)·d)."""
+    P, L = paths.shape
+    return node_emb[paths.reshape(-1)].reshape(P, L * node_emb.shape[1])

@@ -1,0 +1,127 @@
+"""Cost-model-based query plan selection (paper §5, Alg. 4).
+
+Selects a set Q of query paths of length l covering all query vertices,
+minimizing ``Cost_Q(φ) = Σ w(p_q)`` (Eq. 9).  Weight strategies:
+
+* ``deg`` — w(p) = −Σ deg(q_i)  (paper's default; AIP(deg) won their sweep)
+* ``dr``  — w(p) = |DR(o(p_q))| estimated by probing the index (candidate
+            counts in the dominated region)
+
+Initial-path strategies: OIP / AIP / εIP (§5.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from ..graphs import Graph
+from .paths import enumerate_paths
+
+__all__ = ["QueryPlan", "plan_query"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    paths: list  # list of (l+1,) int tuples of query vertex ids
+    cost: float
+    strategy: str
+
+    @property
+    def n_paths(self) -> int:
+        return len(self.paths)
+
+
+def _covered(paths: Sequence[tuple[int, ...]]) -> set[int]:
+    out: set[int] = set()
+    for p in paths:
+        out.update(p)
+    return out
+
+
+def plan_query(
+    q: Graph,
+    length: int,
+    strategy: str = "aip",
+    weight: str = "deg",
+    weight_fn: Callable[[tuple[int, ...]], float] | None = None,
+    epsilon: int = 2,
+    seed: int = 0,
+) -> QueryPlan:
+    """Alg. 4. Returns the best covering path set under the cost model."""
+    all_paths = enumerate_paths(q, np.arange(q.n_vertices, dtype=np.int32), length)
+    if all_paths.shape[0] == 0:
+        # degenerate query (shorter than l): fall back to max-length paths
+        for shorter in range(length - 1, 0, -1):
+            all_paths = enumerate_paths(q, np.arange(q.n_vertices, dtype=np.int32), shorter)
+            if all_paths.shape[0]:
+                break
+        else:
+            all_paths = np.arange(q.n_vertices, dtype=np.int32)[:, None]
+    paths = [tuple(int(x) for x in row) for row in all_paths]
+    deg = q.degrees
+
+    if weight_fn is None:
+        if weight == "deg":
+            weight_fn = lambda p: -float(sum(deg[v] for v in p))  # noqa: E731
+        else:
+            raise ValueError("weight='dr' requires an explicit weight_fn (index probe)")
+    w = {p: weight_fn(p) for p in paths}
+
+    # line 2: highest-degree starting vertex
+    start = int(np.argmax(deg))
+    through = [p for p in paths if start in p]
+    if not through:
+        through = paths
+    rng = np.random.default_rng(seed)
+    if strategy == "oip":
+        initial = [min(through, key=lambda p: w[p])]
+    elif strategy == "aip":
+        initial = list(through)
+    elif strategy == "eip":
+        k = min(epsilon, len(through))
+        sel = rng.choice(len(through), size=k, replace=False)
+        initial = [through[i] for i in sel]
+    else:
+        raise ValueError(f"unknown strategy {strategy}")
+
+    n_q = q.n_vertices
+    best_q: list[tuple[int, ...]] | None = None
+    best_cost = float("inf")
+    for p0 in initial:
+        local = [p0]
+        cost = w[p0]
+        cov = set(p0)
+        stuck = False
+        while len(cov) < n_q:
+            # candidates connecting to the covered set, adding new vertices
+            cands = [
+                p
+                for p in paths
+                if p not in local
+                and (set(p) & cov)
+                and (set(p) - cov)
+            ]
+            if not cands:
+                # disconnected coverage fallback: any path with a new vertex
+                cands = [p for p in paths if set(p) - cov]
+                if not cands:
+                    stuck = True
+                    break
+            # min overlap, then min weight (Alg. 4 line 7)
+            p = min(cands, key=lambda p: (len(set(p) & cov), w[p]))
+            local.append(p)
+            cost += w[p]
+            cov |= set(p)
+        if stuck:
+            continue
+        if cost < best_cost:
+            best_cost = cost
+            best_q = local
+    if best_q is None:
+        # coverage impossible at this length (rare, e.g. pendant chains):
+        # greedily cover with shorter paths
+        best_q = [tuple(int(x) for x in row) for row in all_paths]
+        best_cost = sum(w.get(p, 0.0) for p in best_q)
+    return QueryPlan(paths=best_q, cost=float(best_cost), strategy=f"{strategy}({weight})")

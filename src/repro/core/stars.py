@@ -1,0 +1,103 @@
+"""Unit star graphs and their substructures as dense padded tensors (§3.1).
+
+TPU adaptation: the paper enumerates ``2^deg`` star substructures per
+vertex with explicit graph objects; we represent every star as
+
+    (center_label, leaf_labels[θ], leaf_mask[θ])
+
+and a substructure as the same tensors with a *subset* mask.  All
+``2^deg`` subsets come from one precomputed ``(2^θ, θ)`` bit table, so
+substructure enumeration is a gather — no graph materialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..graphs import Graph
+
+__all__ = ["StarTensors", "build_star_tensors", "subset_table", "build_pair_dataset"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StarTensors:
+    """Padded unit star graphs for a set of center vertices."""
+
+    centers: np.ndarray  # (n,) int32 vertex ids
+    center_labels: np.ndarray  # (n,) int32
+    leaf_labels: np.ndarray  # (n, theta) int32, 0-padded
+    leaf_mask: np.ndarray  # (n, theta) bool
+    overflow: np.ndarray  # (n,) bool — deg > theta (paper: embed as all-ones)
+
+
+def build_star_tensors(g: Graph, vertices: np.ndarray, theta: int) -> StarTensors:
+    vs = np.asarray(vertices, dtype=np.int64)
+    n = vs.shape[0]
+    leaf_labels = np.zeros((n, theta), dtype=np.int32)
+    leaf_mask = np.zeros((n, theta), dtype=bool)
+    overflow = np.zeros((n,), dtype=bool)
+    for i, v in enumerate(vs):
+        row = g.neighbors(int(v))
+        if row.shape[0] > theta:
+            overflow[i] = True
+            row = row[:theta]
+        k = row.shape[0]
+        leaf_labels[i, :k] = g.labels[row]
+        leaf_mask[i, :k] = True
+    return StarTensors(
+        centers=vs.astype(np.int32),
+        center_labels=g.labels[vs].astype(np.int32),
+        leaf_labels=leaf_labels,
+        leaf_mask=leaf_mask,
+        overflow=overflow,
+    )
+
+
+def subset_table(theta: int) -> np.ndarray:
+    """(2^theta, theta) bool table; row b = bitmask of subset b."""
+    b = np.arange(1 << theta, dtype=np.uint32)
+    bits = (b[:, None] >> np.arange(theta, dtype=np.uint32)[None, :]) & 1
+    return bits.astype(bool)
+
+
+@dataclasses.dataclass(frozen=True)
+class PairDataset:
+    """All (g_v, s_v) training pairs for a partition, flattened (Alg. 2)."""
+
+    star_idx: np.ndarray  # (P,) int32 index into the StarTensors arrays
+    subset_mask: np.ndarray  # (P, theta) bool — leaf mask of the substructure
+
+    @property
+    def n_pairs(self) -> int:
+        return int(self.star_idx.shape[0])
+
+
+def build_pair_dataset(stars: StarTensors, rng: np.random.Generator | None = None) -> PairDataset:
+    """Enumerate every proper-or-equal substructure of every non-overflow star.
+
+    Pair count is ``Σ_v 2^min(deg(v), θ)`` (paper §3.2 complexity).
+    """
+    theta = stars.leaf_labels.shape[1]
+    table = subset_table(theta)
+    star_idx: list[np.ndarray] = []
+    masks: list[np.ndarray] = []
+    degs = stars.leaf_mask.sum(axis=1)
+    for i in range(stars.centers.shape[0]):
+        if stars.overflow[i]:
+            continue  # paper: high-degree vertices get all-ones, never trained
+        d = int(degs[i])
+        sub = table[: (1 << d), :]
+        # place the d subset bits onto this star's actual leaf slots
+        m = np.zeros((sub.shape[0], theta), dtype=bool)
+        m[:, :d] = sub[:, :d]
+        star_idx.append(np.full((sub.shape[0],), i, dtype=np.int32))
+        masks.append(m)
+    if not star_idx:
+        return PairDataset(np.zeros((0,), np.int32), np.zeros((0, theta), bool))
+    si = np.concatenate(star_idx)
+    sm = np.concatenate(masks, axis=0)
+    if rng is not None:  # Alg. 2 line 5: shuffle pairs
+        perm = rng.permutation(si.shape[0])
+        si, sm = si[perm], sm[perm]
+    return PairDataset(star_idx=si, subset_mask=sm)

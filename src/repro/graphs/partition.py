@@ -1,0 +1,135 @@
+"""METIS-like balanced min-edge-cut partitioner (paper Alg. 1 line 1).
+
+Real METIS is multilevel KL; here we implement a deterministic two-stage
+scheme that is (a) dependency-free, (b) fast at millions of edges, and
+(c) produces balanced partitions with low edge cut on the small-world /
+power-law graphs the paper uses:
+
+  1. seeded BFS region growing: m BFS frontiers grown round-robin from
+     degree-spread seeds until every vertex is claimed (balance enforced
+     by per-partition capacity);
+  2. boundary refinement: a few Kernighan–Lin-style sweeps moving boundary
+     vertices to the neighboring partition with max gain while respecting
+     capacity.
+
+Partitions drive both the paper pipeline (one GNN model / index per
+partition, trained in parallel across the mesh) and the sharded matcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .graph import Graph
+
+__all__ = ["Partitioning", "partition_graph", "expanded_partition"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Partitioning:
+    assignment: np.ndarray  # (n,) int32 partition id per vertex
+    n_parts: int
+
+    def members(self, j: int) -> np.ndarray:
+        return np.nonzero(self.assignment == j)[0].astype(np.int32)
+
+    def edge_cut(self, g: Graph) -> int:
+        e = g.edge_array()
+        return int(np.sum(self.assignment[e[:, 0]] != self.assignment[e[:, 1]]))
+
+    def sizes(self) -> np.ndarray:
+        return np.bincount(self.assignment, minlength=self.n_parts)
+
+
+def partition_graph(g: Graph, n_parts: int, seed: int = 0, refine_sweeps: int = 2) -> Partitioning:
+    n = g.n_vertices
+    if n_parts <= 1 or n <= n_parts:
+        return Partitioning(np.zeros(n, dtype=np.int32), max(n_parts, 1))
+    rng = np.random.default_rng(seed)
+    cap = int(np.ceil(n / n_parts * 1.05))
+
+    # --- stage 1: BFS region growing from spread seeds -------------------
+    order = np.argsort(-g.degrees, kind="stable")
+    seeds = order[:: max(n // n_parts, 1)][:n_parts]
+    if seeds.shape[0] < n_parts:
+        extra = rng.choice(n, size=n_parts - seeds.shape[0], replace=False)
+        seeds = np.concatenate([seeds, extra])
+    assignment = -np.ones(n, dtype=np.int32)
+    frontiers: list[list[int]] = []
+    sizes = np.zeros(n_parts, dtype=np.int64)
+    for j, s in enumerate(seeds):
+        s = int(s)
+        if assignment[s] == -1:
+            assignment[s] = j
+            sizes[j] += 1
+        frontiers.append([s])
+    active = True
+    while active:
+        active = False
+        for j in range(n_parts):
+            if sizes[j] >= cap or not frontiers[j]:
+                continue
+            new_frontier: list[int] = []
+            for u in frontiers[j]:
+                for w in g.neighbors(u):
+                    w = int(w)
+                    if assignment[w] == -1 and sizes[j] < cap:
+                        assignment[w] = j
+                        sizes[j] += 1
+                        new_frontier.append(w)
+            frontiers[j] = new_frontier
+            active = active or bool(new_frontier)
+    # orphans (disconnected bits): round-robin to smallest partitions
+    orphans = np.nonzero(assignment == -1)[0]
+    for u in orphans:
+        j = int(np.argmin(sizes))
+        assignment[u] = j
+        sizes[j] += 1
+
+    # --- stage 2: boundary refinement (KL-style greedy sweeps) -----------
+    for _ in range(refine_sweeps):
+        moved = 0
+        e = g.edge_array()
+        boundary = np.unique(
+            np.concatenate(
+                [
+                    e[assignment[e[:, 0]] != assignment[e[:, 1]], 0],
+                    e[assignment[e[:, 0]] != assignment[e[:, 1]], 1],
+                ]
+            )
+        )
+        for u in boundary:
+            u = int(u)
+            cur = assignment[u]
+            nbr_parts = assignment[g.neighbors(u)]
+            if nbr_parts.size == 0:
+                continue
+            counts = np.bincount(nbr_parts, minlength=n_parts)
+            best = int(np.argmax(counts))
+            gain = counts[best] - counts[cur]
+            if best != cur and gain > 0 and sizes[best] < cap and sizes[cur] > 1:
+                assignment[u] = best
+                sizes[cur] -= 1
+                sizes[best] += 1
+                moved += 1
+        if moved == 0:
+            break
+    return Partitioning(assignment, n_parts)
+
+
+def expanded_partition(g: Graph, part: Partitioning, j: int, hops: int) -> np.ndarray:
+    """Vertex set of partition j expanded outward by ``hops`` (paper §4.2:
+    paths of length l are rooted in G_j but may walk l hops outside)."""
+    cur = set(map(int, part.members(j)))
+    frontier = set(cur)
+    for _ in range(hops):
+        nxt: set[int] = set()
+        for u in frontier:
+            nxt.update(map(int, g.neighbors(u)))
+        nxt -= cur
+        cur |= nxt
+        frontier = nxt
+        if not frontier:
+            break
+    return np.asarray(sorted(cur), dtype=np.int32)

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: fused DCN-v2 cross layer  x₀ ⊙ (W xₗ + b) + xₗ.
+
+The unfused XLA path writes the (B, D) matmul result to HBM and reads
+it back for the elementwise epilogue; fusing the epilogue into the
+matmul tile keeps it in VMEM — one HBM round trip saved per cross layer
+(3 layers per DCN-v2 forward, B up to 262k rows in serve_bulk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["cross_interact_kernel", "cross_interact_pallas"]
+
+
+def cross_interact_kernel(x0_ref, x_ref, w_ref, b_ref, out_ref):
+    x0 = x0_ref[...]
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = jax.lax.dot(x, w, precision=jax.lax.Precision.DEFAULT) + b  # (block_b, D)
+    out_ref[...] = x0 * y + x  # fused epilogue, VMEM-resident
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def cross_interact_pallas(x0, x, w, b, *, block_b: int = 256, interpret: bool = True):
+    """x0,x: (B, D); w: (D, D); b: (D,) → (B, D)."""
+    B, D = x.shape
+    assert B % block_b == 0, (B, block_b)
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        cross_interact_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, D), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, D), lambda i: (i, 0)),
+            pl.BlockSpec((D, D), lambda i: (0, 0)),  # weights resident
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D), x.dtype),
+        interpret=interpret,
+    )(x0, x, w, b)

@@ -1,0 +1,24 @@
+"""Jit wrapper for the fused DCN-v2 cross layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import cross_interact_pallas
+from .ref import cross_interact_ref
+
+__all__ = ["cross_interact", "cross_interact_ref"]
+
+
+def cross_interact(x0, x, w, b, block_b: int = 256, use_pallas: bool = True, interpret: bool | None = None):
+    if not use_pallas:
+        return cross_interact_ref(x0, x, w, b)
+    B, D = x.shape
+    interpret = (jax.default_backend() != "tpu") if interpret is None else interpret
+    block_b = min(block_b, int(np.ceil(B / 8) * 8))
+    Bp = int(np.ceil(B / block_b) * block_b)
+    x0p = jnp.pad(x0, ((0, Bp - B), (0, 0)))
+    xp = jnp.pad(x, ((0, Bp - B), (0, 0)))
+    out = cross_interact_pallas(x0p, xp, w, b, block_b=block_b, interpret=interpret)
+    return out[:B]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the fused cross layer."""
+from __future__ import annotations
+
+__all__ = ["cross_interact_ref"]
+
+
+def cross_interact_ref(x0, x, w, b):
+    return x0 * (x @ w + b) + x

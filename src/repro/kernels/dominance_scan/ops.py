@@ -1,0 +1,54 @@
+"""Jit wrapper: padding + backend gating for the dominance scan.
+
+``dominance_scan(...)`` pads N to the block size and D to a lane
+multiple (128), runs the Pallas kernel (interpret=True off-TPU), and
+slices the mask back.  Padding uses +inf-like sentinels that can never
+produce a false positive.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import dominance_scan_pallas
+from .ref import dominance_scan_ref
+
+__all__ = ["dominance_scan", "dominance_scan_ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def dominance_scan(
+    q,
+    q0,
+    emb,
+    emb0,
+    eps: float = 1e-6,
+    block_n: int = 1024,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+):
+    """q,q0 (D,); emb,emb0 (N, D) → int32 keep mask (N,)."""
+    if not use_pallas:
+        return dominance_scan_ref(q, q0, emb, emb0, eps)
+    N, D = emb.shape
+    D0 = emb0.shape[1]
+    if N == 0:
+        return jnp.zeros((0,), jnp.int32)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    Dp = int(np.ceil(D / 128) * 128)
+    D0p = int(np.ceil(D0 / 128) * 128)
+    Np = int(np.ceil(N / block_n) * block_n)
+    # pad features with zeros: q_pad=0 <= emb_pad=0 and |0-0|<=eps → neutral
+    qp = jnp.pad(q, (0, Dp - D))
+    q0p = jnp.pad(q0, (0, D0p - D0))
+    # feature padding: zeros (neutral).  row padding: emb0 rows = +inf so the
+    # label-equality term definitively rejects every padded row.
+    embp = jnp.pad(emb, ((0, Np - N), (0, Dp - D)))
+    emb0p = jnp.pad(emb0, ((0, 0), (0, D0p - D0)))
+    emb0p = jnp.pad(emb0p, ((0, Np - N), (0, 0)), constant_values=jnp.inf)
+    mask = dominance_scan_pallas(qp, q0p, embp, emb0p, block_n=block_n, eps=eps, interpret=interpret)
+    return mask[:N]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the dominance scan kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["dominance_scan_ref"]
+
+
+def dominance_scan_ref(q, q0, emb, emb0, eps: float = 1e-6):
+    dom = jnp.all(q[None, :] <= emb + eps, axis=-1)
+    lab = jnp.all(jnp.abs(emb0 - q0[None, :]) <= eps, axis=-1)
+    return (dom & lab).astype(jnp.int32)

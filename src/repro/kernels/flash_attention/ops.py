@@ -1,0 +1,42 @@
+"""Jit wrapper for flash attention: GQA head layout + padding + gating."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import flash_attention_pallas
+from .ref import flash_attention_ref
+
+__all__ = ["flash_attention", "flash_attention_ref"]
+
+
+def flash_attention(
+    q, k, v, causal: bool = True, window: int | None = None,
+    block_q: int = 128, block_k: int = 128,
+    use_pallas: bool = True, interpret: bool | None = None,
+):
+    """q: (B, S, Hq, dh); k,v: (B, S, Hkv, dh) — GQA broadcast handled here."""
+    B, S, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    interpret = (jax.default_backend() != "tpu") if interpret is None else interpret
+    kk = jnp.repeat(k, G, axis=2) if G > 1 else k
+    vv = jnp.repeat(v, G, axis=2) if G > 1 else v
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, dh)
+    kf = kk.transpose(0, 2, 1, 3).reshape(B * Hq, S, dh)
+    vf = vv.transpose(0, 2, 1, 3).reshape(B * Hq, S, dh)
+    if not use_pallas:
+        out = flash_attention_ref(qf, kf, vf, causal, window)
+    else:
+        bq = min(block_q, S)
+        bk = min(block_k, S)
+        while S % bq:
+            bq //= 2
+        while S % bk:
+            bk //= 2
+        out = flash_attention_pallas(
+            qf, kf, vf, block_q=max(bq, 1), block_k=max(bk, 1),
+            causal=causal, window=window, interpret=interpret,
+        )
+    return out.reshape(B, Hq, S, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["flash_attention_ref"]
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int | None = None):
+    """q,k,v: (BH, S, dh)."""
+    S = q.shape[1]
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window is not None:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    s = jnp.where(mask[None], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", a, v.astype(jnp.float32)).astype(q.dtype)

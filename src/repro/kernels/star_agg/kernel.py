@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: one-hot-matmul embedding gather + masked reduce.
+
+The GNN substrate's hot aggregation: for a block of vertices, gather
+label-embedding rows for up to K padded neighbors and sum them under the
+validity mask (used by the GNN-PE star encoder, the ELL minibatch path
+of the GNN zoo, and as an EmbeddingBag for small per-block vocabularies).
+
+TPU adaptation: a data-dependent row gather is hostile to the vector
+unit, but when the table fits VMEM the gather *is* a matmul —
+``one_hot(idx) @ table`` — which runs on the MXU at full throughput.
+The kernel unrolls the K neighbor slots, accumulating
+``(one_hot(idx[:,k]) * mask[:,k]) @ table`` into the output tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["star_agg_kernel", "star_agg_pallas"]
+
+
+def star_agg_kernel(idx_ref, mask_ref, table_ref, out_ref, *, n_slots: int):
+    table = table_ref[...]  # (V, F) resident in VMEM
+    V = table.shape[0]
+    idx = idx_ref[...]  # (block_n, K)
+    mask = mask_ref[...]  # (block_n, K)
+    acc = jnp.zeros((idx.shape[0], table.shape[1]), jnp.float32)
+    for k in range(n_slots):  # unrolled: K is small (θ ≤ 16)
+        onehot = jax.nn.one_hot(idx[:, k], V, dtype=jnp.float32)
+        onehot = onehot * mask[:, k].astype(jnp.float32)[:, None]
+        acc += jax.lax.dot(onehot, table, precision=jax.lax.Precision.HIGHEST)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def star_agg_pallas(idx, mask, table, *, block_n: int = 512, interpret: bool = True):
+    """idx (N, K) int32, mask (N, K) bool, table (V, F) → (N, F) masked sum."""
+    N, K = idx.shape
+    V, F = table.shape
+    assert N % block_n == 0, (N, block_n)
+    grid = (N // block_n,)
+    return pl.pallas_call(
+        functools.partial(star_agg_kernel, n_slots=K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, K), lambda i: (i, 0)),
+            pl.BlockSpec((V, F), lambda i: (0, 0)),  # table resident per tile
+        ],
+        out_specs=pl.BlockSpec((block_n, F), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, F), jnp.float32),
+        interpret=interpret,
+    )(idx, mask, table)

@@ -1,0 +1,26 @@
+"""Jit wrapper for star_agg: padding + backend gating."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import star_agg_pallas
+from .ref import star_agg_ref
+
+__all__ = ["star_agg", "star_agg_ref"]
+
+
+def star_agg(idx, mask, table, block_n: int = 512, use_pallas: bool = True, interpret: bool | None = None):
+    if not use_pallas:
+        return star_agg_ref(idx, mask, table)
+    N, K = idx.shape
+    if N == 0:
+        return jnp.zeros((0, table.shape[1]), jnp.float32)
+    interpret = (jax.default_backend() != "tpu") if interpret is None else interpret
+    block_n = min(block_n, int(np.ceil(N / 8) * 8))
+    Np = int(np.ceil(N / block_n) * block_n)
+    idxp = jnp.pad(idx, ((0, Np - N), (0, 0)))
+    maskp = jnp.pad(mask, ((0, Np - N), (0, 0)))  # padded rows fully masked
+    out = star_agg_pallas(idxp, maskp, table, block_n=block_n, interpret=interpret)
+    return out[:N]

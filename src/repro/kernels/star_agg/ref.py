@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the star aggregation kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["star_agg_ref"]
+
+
+def star_agg_ref(idx, mask, table):
+    gathered = table[idx]  # (N, K, F)
+    return jnp.sum(gathered * mask[..., None].astype(table.dtype), axis=1).astype(jnp.float32)

@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Usage:"""  # noqa: E501 — real docstring continues below (XLA_FLAGS must be first)
+_DOC = """
+  PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-4b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both] [--out experiments/dryrun]
+
+Per cell, records to JSON:
+  * compile success, wall-clock compile time
+  * compiled.memory_analysis()  (bytes per device — proves it fits)
+  * compiled.cost_analysis()    (HLO FLOPs + bytes for §Roofline)
+  * collective bytes parsed from the optimized HLO (launch/hlo_stats)
+
+The orchestrator (--all) runs one subprocess per cell so a pathological
+compile can't take the whole sweep down, and already-done cells are
+skipped (resumable).
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs import (
+    build_step,
+    get_arch,
+    init_params,
+    input_pspecs,
+    input_specs,
+    param_pspecs,
+    resolve_config,
+)
+from ..dist.context import use_mesh
+from ..dist.sharding import to_shardings
+from ..train.optimizer import OptConfig
+from .hlo_cost import analyze_hlo
+from .mesh import make_production_mesh
+
+OUT_DEFAULT = Path("experiments/dryrun")
+
+
+def _abstract(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str, out_dir: Path, smoke: bool = False) -> dict:
+    arch = get_arch(arch_name)
+    cell = arch.cell(shape_name)
+    if cell.skip:
+        rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_kind, "status": "skipped", "reason": cell.skip}
+        _save(out_dir, rec)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg = resolve_config(arch, cell, smoke=smoke)
+    t0 = time.time()
+    with use_mesh(mesh):
+        specs = input_specs(arch, cell, cfg, smoke=smoke)
+        pspecs_in = input_pspecs(arch, cell, cfg)
+        step, takes_opt = build_step(arch, cell, cfg, mesh=mesh, opt_cfg=OptConfig())
+        # abstract params (no allocation)
+        params_shape = jax.eval_shape(lambda: init_params(arch, cfg, jax.random.PRNGKey(0)))
+        p_pspecs = param_pspecs(arch, cfg, params_shape)
+        p_shard = to_shardings(mesh, p_pspecs)
+        b_shard = to_shardings(mesh, pspecs_in)
+        if takes_opt:
+            opt_shape = jax.eval_shape(
+                lambda: {
+                    "m": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params_shape),
+                    "v": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params_shape),
+                    "step": jnp.zeros((), jnp.int32),
+                }
+            )
+            o_shard = {
+                "m": jax.tree.map(lambda s: s, p_shard),
+                "v": jax.tree.map(lambda s: s, p_shard),
+                "step": to_shardings(mesh, P()),
+            }
+            # donate params + opt state → in-place update (halves peak memory)
+            fn = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard), donate_argnums=(0, 1))
+            lowered = fn.lower(params_shape, opt_shape, _abstract_tree(specs))
+        else:
+            donate = (1,) if cell.kind == "decode" else ()  # in-place KV cache
+            fn = jax.jit(step, in_shardings=(p_shard, b_shard), donate_argnums=donate)
+            lowered = fn.lower(params_shape, _abstract_tree(specs))
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        stats = analyze_hlo(hlo)
+    rec = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "n_devices": int(mesh.devices.size),
+        "memory": _mem_dict(mem),
+        # per-device quantities from the loop-aware HLO analyzer
+        "flops": stats["flops"],
+        "bytes": stats["bytes"],
+        "bytes_fused": stats["bytes_fused"],
+        "collective_bytes": stats["collective_bytes"],
+        "collective_bytes_total": stats["collective_bytes_total"],
+        "collective_count": stats["collective_count"],
+        # raw XLA numbers (counts while bodies once — kept for reference)
+        "xla_flops_raw": float(cost.get("flops", -1.0)) if cost else -1.0,
+        "xla_bytes_raw": float(cost.get("bytes accessed", -1.0)) if cost else -1.0,
+        "model_params": _params_count(cfg, arch),
+        "model_params_active": _params_active(cfg, arch),
+        "hlo_bytes": len(hlo),
+    }
+    _save(out_dir, rec)
+    return rec
+
+
+def _abstract_tree(specs):
+    return specs  # already ShapeDtypeStructs
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in (
+        "generated_code_size_in_bytes",
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "peak_memory_in_bytes",
+    ):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _params_count(cfg, arch):
+    try:
+        if arch.family == "lm":
+            return int(cfg.n_params())
+        import jax
+
+        shapes = jax.eval_shape(lambda: init_params(arch, cfg, jax.random.PRNGKey(0)))
+        return int(sum(int(np_prod(x.shape)) for x in jax.tree.leaves(shapes)))
+    except Exception:
+        return -1
+
+
+def np_prod(shape):
+    out = 1
+    for s in shape:
+        out *= s
+    return out
+
+
+def _params_active(cfg, arch):
+    try:
+        if arch.family == "lm":
+            return int(cfg.n_active_params())
+        return _params_count(cfg, arch)
+    except Exception:
+        return -1
+
+
+def _save(out_dir: Path, rec: dict):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    p = out_dir / f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    p.write_text(json.dumps(rec, indent=1))
+    print(f"[dryrun] {rec['arch']}/{rec['shape']}/{rec['mesh']}: {rec['status']}", flush=True)
+
+
+def orchestrate(mesh_kinds: list[str], out_dir: Path, only_arch: str | None = None, timeout: int = 3600):
+    from ..configs import all_cells
+
+    cells = all_cells(include_skipped=True, include_extra=True)
+    results = []
+    for arch, cell in cells:
+        if only_arch and arch.name != only_arch:
+            continue
+        for mk in mesh_kinds:
+            p = out_dir / f"{arch.name}__{cell.name}__{mk}.json"
+            if p.exists():
+                rec = json.loads(p.read_text())
+                if rec.get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] cached {p.name}: {rec['status']}")
+                    results.append(rec)
+                    continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch.name, "--shape", cell.name, "--mesh", mk,
+                "--out", str(out_dir),
+            ]
+            t0 = time.time()
+            try:
+                proc = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout)
+                if proc.returncode != 0:
+                    rec = {
+                        "arch": arch.name, "shape": cell.name, "mesh": mk,
+                        "status": "error", "stderr": proc.stderr[-4000:],
+                        "elapsed_s": round(time.time() - t0, 1),
+                    }
+                    _save(out_dir, rec)
+                else:
+                    rec = json.loads(p.read_text())
+            except subprocess.TimeoutExpired:
+                rec = {"arch": arch.name, "shape": cell.name, "mesh": mk, "status": "timeout"}
+                _save(out_dir, rec)
+            results.append(rec)
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    sk = sum(1 for r in results if r.get("status") == "skipped")
+    bad = [r for r in results if r.get("status") not in ("ok", "skipped")]
+    print(f"[dryrun] done: {ok} ok, {sk} skipped, {len(bad)} failed")
+    for r in bad:
+        print("  FAILED:", r["arch"], r["shape"], r["mesh"], r.get("status"))
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DEFAULT))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    mesh_kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        orchestrate(mesh_kinds, out_dir, only_arch=args.arch, timeout=args.timeout)
+    else:
+        assert args.arch and args.shape, "--arch and --shape required without --all"
+        for mk in mesh_kinds:
+            run_cell(args.arch, args.shape, mk, out_dir, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

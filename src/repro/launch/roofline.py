@@ -1,0 +1,171 @@
+"""Roofline analysis from dry-run artifacts (assignment §Roofline).
+
+Per (arch × shape) on the single-pod mesh:
+    compute term    = HLO_FLOPs / peak_FLOP/s            (per-device both)
+    memory term     = HLO_bytes / HBM_bw                 (TPU-fusion projection;
+                      the CPU-fusion upper bound is reported alongside)
+    collective term = Σ_kind collective_bytes·ring_factor / link_bw
+with v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+
+MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for LM training;
+analytic per-family conventions for the others (documented in
+EXPERIMENTS.md).  The ratio MODEL_FLOPS/HLO_FLOPs exposes remat/
+redundancy waste.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--dir experiments/dryrun]
+writes experiments/roofline.md + roofline.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+# effective wire multiplier per collective kind (ring algorithms)
+RING_FACTOR = {
+    "all-reduce": 2.0,  # reduce-scatter + all-gather passes
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def model_flops(rec: dict) -> float:
+    """Analytic useful FLOPs for the whole program, GLOBAL (all chips)."""
+    arch, shape = rec["arch"], rec["shape"]
+    n_act = rec.get("model_params_active", rec.get("model_params", 0))
+    fam_lm = arch in (
+        "minitron-4b",
+        "gemma3-1b",
+        "command-r-plus-104b",
+        "deepseek-v2-lite-16b",
+        "qwen3-moe-235b-a22b",
+    )
+    if fam_lm:
+        meta = {
+            "train_4k": (4096, 256),
+            "prefill_32k": (32768, 32),
+            "decode_32k": (32768, 128),
+            "long_500k": (524288, 1),
+        }[shape]
+        S, B = meta
+        if shape == "train_4k":
+            return 6.0 * n_act * S * B  # fwd+bwd
+        if shape == "prefill_32k":
+            return 2.0 * n_act * S * B
+        # decode: one token per sequence + attention over the cache
+        return 2.0 * n_act * B  # attention O(S·d) term ≪ matmul for one token
+    if arch == "dcn-v2":
+        # dense compute = cross+MLP params × batch (tables are lookups)
+        p_dense = 429 * 429 * 3 + 429 * 1024 + 1024 * 1024 + 1024 * 512
+        batch = {"train_batch": 65536, "serve_p99": 512, "serve_bulk": 262144, "retrieval_cand": 1}[
+            shape
+        ]
+        mult = 6.0 if shape == "train_batch" else 2.0
+        f = mult * p_dense * batch
+        if shape == "retrieval_cand":
+            f += 2.0 * 1_000_000 * 64  # candidate dot products
+        return f
+    # GNN: params × nodes-evaluated convention
+    p = rec.get("model_params", 0)
+    nodes = {
+        "full_graph_sm": 2708,
+        "minibatch_lg": 1024 * 16 * 11,  # layered vertex sets
+        "ogb_products": 2_449_029,
+        "molecule": 128 * 30,
+    }.get(shape, 1)
+    return 6.0 * p * nodes
+
+
+def load(dir_: Path, mesh: str) -> list:
+    recs = []
+    for p in sorted(dir_.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def terms(rec: dict) -> dict:
+    t_comp = rec["flops"] / PEAK_FLOPS
+    t_mem = rec["bytes_fused"] / HBM_BW
+    t_mem_ub = rec["bytes"] / HBM_BW
+    t_coll = sum(
+        v * RING_FACTOR.get(k, 1.0) for k, v in rec.get("collective_bytes", {}).items()
+    ) / ICI_BW
+    dominant = max(
+        [("compute", t_comp), ("memory", t_mem), ("collective", t_coll)], key=lambda kv: kv[1]
+    )[0]
+    mf = model_flops(rec)
+    mf_dev = mf / max(rec.get("n_devices", 1), 1)
+    useful = mf_dev / rec["flops"] if rec["flops"] else 0.0
+    # roofline fraction: useful work time over the bound implied by the
+    # dominant term (how close the step is to the hardware limit)
+    t_bound = max(t_comp, t_mem, t_coll)
+    frac = (mf_dev / PEAK_FLOPS) / t_bound if t_bound > 0 else 0.0
+    return {
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "memory_ub_s": t_mem_ub,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "useful_ratio": useful,
+        "roofline_frac": frac,
+        "peak_gb": rec.get("memory", {}).get("peak_memory_in_bytes", 0) / 1e9,
+    }
+
+
+def fmt(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}µs"
+    if x < 1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.md")
+    args = ap.parse_args()
+    recs = load(Path(args.dir), "single")
+    rows = []
+    for rec in recs:
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"], "skip": rec["reason"]})
+            continue
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"], "skip": f"STATUS={rec['status']}"})
+            continue
+        t = terms(rec)
+        rows.append({"arch": rec["arch"], "shape": rec["shape"], **t})
+    lines = [
+        "| arch | shape | compute | memory (ub) | collective | dominant | MODEL_FLOPS | useful | roofline | peak GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skip" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | — | — |")
+            continue
+        lines.append(
+            "| {arch} | {shape} | {c} | {m} ({mu}) | {k} | **{dom}** | {mf:.2e} | {ur:.2f} | {rf:.1%} | {pg:.1f} |".format(
+                arch=r["arch"], shape=r["shape"], c=fmt(r["compute_s"]), m=fmt(r["memory_s"]),
+                mu=fmt(r["memory_ub_s"]), k=fmt(r["collective_s"]), dom=r["dominant"],
+                mf=r["model_flops_global"], ur=r["useful_ratio"], rf=r["roofline_frac"],
+                pg=r["peak_gb"],
+            )
+        )
+    out = Path(args.out)
+    out.write_text("\n".join(lines) + "\n")
+    Path(args.out.replace(".md", ".json")).write_text(json.dumps(rows, indent=1, default=str))
+    print("\n".join(lines))
+
+
+if __name__ == "__main__":
+    main()

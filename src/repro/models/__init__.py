@@ -1,0 +1,47 @@
+from .common import apply_rope, count_params, cross_entropy_loss, dense_init, rms_norm
+from .gnn import (
+    GNNConfig,
+    gnn_energy_loss,
+    gnn_forward_blocks,
+    gnn_forward_full,
+    gnn_node_loss,
+    init_gnn_params,
+)
+from .moe import MoEConfig, init_moe_params, moe_block
+from .recsys import RecsysConfig, dcn_forward, dcn_loss, init_dcn_params, retrieval_scores
+from .transformer import (
+    TransformerConfig,
+    decode_step,
+    init_cache,
+    init_lm_params,
+    lm_forward,
+    lm_loss,
+)
+
+__all__ = [
+    "TransformerConfig",
+    "init_lm_params",
+    "lm_forward",
+    "lm_loss",
+    "init_cache",
+    "decode_step",
+    "MoEConfig",
+    "init_moe_params",
+    "moe_block",
+    "GNNConfig",
+    "init_gnn_params",
+    "gnn_forward_full",
+    "gnn_forward_blocks",
+    "gnn_node_loss",
+    "gnn_energy_loss",
+    "RecsysConfig",
+    "init_dcn_params",
+    "dcn_forward",
+    "dcn_loss",
+    "retrieval_scores",
+    "dense_init",
+    "rms_norm",
+    "apply_rope",
+    "cross_entropy_loss",
+    "count_params",
+]

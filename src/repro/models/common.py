@@ -1,0 +1,65 @@
+"""Shared neural building blocks (pure-JAX, pytree params, no flax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init",
+    "rms_norm",
+    "rope_freqs",
+    "apply_rope",
+    "cross_entropy_loss",
+    "count_params",
+]
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * s).astype(dtype)
+
+
+def rms_norm(x, gamma, eps: float = 1e-6, compute_dtype_elementwise: bool = True):
+    """RMSNorm with f32 *reduction* only (§Perf A4): the variance sum runs in
+    f32 for stability, but the normalize/scale elementwise chain stays in the
+    compute dtype — halves the normalization's HBM traffic in bf16 models
+    (backward no longer materializes f32 copies of the residual stream)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    if compute_dtype_elementwise:
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        return x * inv * (1.0 + gamma.astype(x.dtype))
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, dh) rotary on the last dim; positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Mean token cross-entropy; logits (..., V), labels (...,) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(p.shape) for p in jax.tree.leaves(params)))

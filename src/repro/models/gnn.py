@@ -1,0 +1,287 @@
+"""GNN architecture zoo — SchNet, GraphSAGE, MACE(-lite), GIN.
+
+Message passing is implemented with ``jax.ops.segment_sum`` over an
+(E, 2) edge-index array (JAX has no CSR sparse — scatter/segment ops ARE
+the system here, per the assignment).  Three input regimes share the
+same layer cores:
+
+  * full-graph:   edge_index over all N nodes (full_graph_sm/ogb_products)
+  * ELL blocks:   padded fanout samples from graphs/sampler (minibatch_lg)
+  * molecules:    (B, M)-padded batches flattened into one disjoint graph
+
+MACE adaptation (DESIGN §6): the real MACE contracts spherical-harmonic
+irreps with Clebsch–Gordan tables; we build the equivalent *Cartesian*
+equivariant features up to l=2 (vector and traceless rank-2 moments) and
+take correlation-order-3 invariant contractions (ACE style).  Outputs are
+E(3)-invariant — verified by the rotation-invariance test.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import dense_init
+
+__all__ = ["GNNConfig", "init_gnn_params", "gnn_forward_full", "gnn_forward_blocks", "gnn_node_loss", "gnn_energy_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    kind: str = "gin"  # gin | sage | schnet | mace
+    n_layers: int = 2
+    d_hidden: int = 64
+    d_in: int = 16
+    n_classes: int = 8
+    # schnet
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    # mace
+    l_max: int = 2
+    correlation: int = 3
+    mace_n_rbf: int = 8
+    # sage
+    aggregator: str = "mean"
+    dtype: Any = "float32"
+    # §Perf B1: partition-parallel full-graph training with halo exchange
+    partition_parallel: bool = False
+    n_shards: int = 16
+    boundary_frac: float = 0.05
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def _mlp_init(key, dims):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {"w": dense_init(ks[i], (dims[i], dims[i + 1])), "b": jnp.zeros((dims[i + 1],))}
+        for i in range(len(dims) - 1)
+    ]
+
+
+def _mlp_apply(layers, x, act=jax.nn.relu, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"].astype(x.dtype) + l["b"].astype(x.dtype)
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def init_gnn_params(key, cfg: GNNConfig):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    H = cfg.d_hidden
+    p: dict = {"encode": _mlp_init(ks[0], [cfg.d_in, H])}
+    layers = []
+    for i in range(cfg.n_layers):
+        k = ks[1 + i]
+        if cfg.kind == "gin":
+            layers.append(
+                {"mlp": _mlp_init(k, [H, H, H]), "eps": jnp.zeros(())}
+            )
+        elif cfg.kind == "sage":
+            k1, k2 = jax.random.split(k)
+            layers.append({"w_self": dense_init(k1, (H, H)), "w_nbr": dense_init(k2, (H, H)), "b": jnp.zeros((H,))})
+        elif cfg.kind == "schnet":
+            k1, k2, k3 = jax.random.split(k, 3)
+            layers.append(
+                {
+                    "filter": _mlp_init(k1, [cfg.n_rbf, H, H]),
+                    "dense1": dense_init(k2, (H, H)),
+                    "dense2": dense_init(k3, (H, H)),
+                    "b1": jnp.zeros((H,)),
+                    "b2": jnp.zeros((H,)),
+                }
+            )
+        elif cfg.kind == "mace":
+            k1, k2 = jax.random.split(k)
+            n_inv = 5  # A0, |A1|², A2:A2, A1·A2·A1, A0³ (correlation-3 set)
+            layers.append(
+                {
+                    "radial": _mlp_init(k1, [cfg.mace_n_rbf, H, 3 * H]),  # per-l channel weights
+                    "mix": _mlp_init(k2, [n_inv * H, H, H]),
+                }
+            )
+        else:
+            raise ValueError(cfg.kind)
+    p["layers"] = layers
+    p["readout"] = _mlp_init(ks[-1], [H, cfg.n_classes])
+    return p
+
+
+# ----------------------------------------------------------- basis fns ----
+
+
+def _rbf(d, n_rbf, cutoff):
+    """Gaussian radial basis (SchNet) with cosine cutoff envelope."""
+    centers = jnp.linspace(0.0, cutoff, n_rbf, dtype=d.dtype)
+    gamma = n_rbf / cutoff
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(d / cutoff, 0, 1)) + 1.0)
+    return jnp.exp(-gamma * (d[..., None] - centers) ** 2) * env[..., None]
+
+
+def _bessel(d, n_rbf, cutoff):
+    """Bessel radial basis (MACE/NequIP)."""
+    n = jnp.arange(1, n_rbf + 1, dtype=d.dtype)
+    x = jnp.clip(d, 1e-6, None)
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(d / cutoff, 0, 1)) + 1.0)
+    return (jnp.sin(n * jnp.pi * x[..., None] / cutoff) / x[..., None]) * env[..., None]
+
+
+def _ssp(x):  # shifted softplus (SchNet activation)
+    return jax.nn.softplus(x) - np.log(2.0)
+
+
+# ------------------------------------------------------------- layers -----
+
+
+def _agg(msg, dst, n_nodes, how="sum"):
+    s = jax.ops.segment_sum(msg, dst, num_segments=n_nodes)
+    if how == "sum":
+        return s
+    cnt = jax.ops.segment_sum(jnp.ones((msg.shape[0], 1), msg.dtype), dst, num_segments=n_nodes)
+    if how == "mean":
+        return s / jnp.maximum(cnt, 1.0)
+    raise ValueError(how)
+
+
+def _gin_layer(p, h, src, dst, n_nodes, cfg):
+    nbr = _agg(h[src], dst, n_nodes, "sum")
+    return _mlp_apply(p["mlp"], (1.0 + p["eps"]) * h + nbr)
+
+
+def _sage_layer(p, h, src, dst, n_nodes, cfg):
+    nbr = _agg(h[src], dst, n_nodes, cfg.aggregator)
+    out = h @ p["w_self"].astype(h.dtype) + nbr @ p["w_nbr"].astype(h.dtype) + p["b"].astype(h.dtype)
+    return jax.nn.relu(out)
+
+
+def _schnet_layer(p, h, src, dst, n_nodes, cfg, dist):
+    w = _mlp_apply(p["filter"], _rbf(dist, cfg.n_rbf, cfg.cutoff).astype(h.dtype), act=_ssp, final_act=True)
+    msg = h[src] * w  # cfconv: continuous filter × neighbor features
+    agg = _agg(msg, dst, n_nodes, "sum")
+    out = _ssp(agg @ p["dense1"].astype(h.dtype) + p["b1"].astype(h.dtype))
+    return h + out @ p["dense2"].astype(h.dtype) + p["b2"].astype(h.dtype)
+
+
+def _mace_layer(p, h, src, dst, n_nodes, cfg, vec, dist):
+    """Cartesian ACE layer, l ≤ 2, correlation order 3 (see module doc)."""
+    H = h.shape[-1]
+    rhat = vec / jnp.maximum(dist[:, None], 1e-6)
+    radial = _mlp_apply(p["radial"], _bessel(dist, cfg.mace_n_rbf, cfg.cutoff).astype(h.dtype))
+    R0, R1, R2 = radial[:, :H], radial[:, H : 2 * H], radial[:, 2 * H :]
+    hj = h[src]
+    # l = 0, 1, 2 equivariant moments
+    A0 = _agg(R0 * hj, dst, n_nodes, "sum")  # (N, H)
+    m1 = (R1 * hj)[:, None, :] * rhat[:, :, None]  # (E, 3, H)
+    A1 = jax.ops.segment_sum(m1, dst, num_segments=n_nodes)  # (N, 3, H)
+    outer = rhat[:, :, None] * rhat[:, None, :] - jnp.eye(3, dtype=h.dtype) / 3.0
+    m2 = (R2 * hj)[:, None, None, :] * outer[..., None]  # (E, 3, 3, H)
+    A2 = jax.ops.segment_sum(m2, dst, num_segments=n_nodes)  # (N, 3, 3, H)
+    # invariant contractions, correlation order up to 3
+    B1 = jnp.sum(A1 * A1, axis=1)  # (N, H)
+    B2 = jnp.einsum("nabh,nabh->nh", A2, A2)
+    B3 = jnp.einsum("nah,nabh,nbh->nh", A1, A2, A1)  # order-3 coupling
+    B4 = A0 * A0 * A0
+    inv = jnp.concatenate([A0, B1, B2, B3, B4], axis=-1)
+    return h + _mlp_apply(p["mix"], inv)
+
+
+# ------------------------------------------------------------- drivers ----
+
+
+def gnn_forward_full(params, cfg: GNNConfig, node_feat, edge_index, positions=None, n_nodes=None):
+    """Full-graph forward.  node_feat (N, d_in); edge_index (E, 2) directed.
+
+    Geometric models (schnet/mace) require ``positions`` (N, 3).
+    """
+    dtype = cfg.compute_dtype
+    h = _mlp_apply(params["encode"], node_feat.astype(dtype))
+    n = n_nodes or node_feat.shape[0]
+    src, dst = edge_index[:, 0], edge_index[:, 1]
+    vec = dist = None
+    if cfg.kind in ("schnet", "mace"):
+        assert positions is not None
+        vec = (positions[src] - positions[dst]).astype(dtype)
+        dist = jnp.linalg.norm(vec, axis=-1)
+    for p in params["layers"]:
+        if cfg.kind == "gin":
+            h = _gin_layer(p, h, src, dst, n, cfg)
+        elif cfg.kind == "sage":
+            h = _sage_layer(p, h, src, dst, n, cfg)
+        elif cfg.kind == "schnet":
+            h = _schnet_layer(p, h, src, dst, n, cfg, dist)
+        elif cfg.kind == "mace":
+            h = _mace_layer(p, h, src, dst, n, cfg, vec, dist)
+    return _mlp_apply(params["readout"], h)  # (N, n_classes)
+
+
+def gnn_forward_blocks(params, cfg: GNNConfig, feats, blocks):
+    """Sampled-minibatch forward over ELL blocks (GraphSAGE regime).
+
+    feats: (N_outer, d_in) features of the outermost layer's vertex set;
+    blocks: list over layers, outermost first, each dict with
+      nbr_index (n_dst, fanout) int32 and mask (n_dst, fanout) bool,
+      dst_index (n_dst,) — rows of the src set that are the dst vertices.
+    """
+    dtype = cfg.compute_dtype
+    h = _mlp_apply(params["encode"], feats.astype(dtype))
+    for p, blk in zip(params["layers"], blocks):
+        nbr = h[blk["nbr_index"]]  # (n_dst, fanout, H) ELL gather
+        mask = blk["mask"][..., None].astype(dtype)
+        s = jnp.sum(nbr * mask, axis=1)
+        if cfg.kind == "sage" and cfg.aggregator == "mean":
+            agg = s / jnp.maximum(mask.sum(1), 1.0)
+        else:
+            agg = s
+        h_dst = h[blk["dst_index"]]
+        if cfg.kind == "gin":
+            h = _mlp_apply(p["mlp"], (1.0 + p["eps"]) * h_dst + agg)
+        else:  # sage-style update works for every kind in sampled regime
+            w_self = p.get("w_self")
+            if w_self is None:  # schnet/mace sampled fallback: dense mix
+                h = jax.nn.relu(h_dst + agg)
+            else:
+                h = jax.nn.relu(
+                    h_dst @ p["w_self"].astype(dtype) + agg @ p["w_nbr"].astype(dtype) + p["b"].astype(dtype)
+                )
+    return _mlp_apply(params["readout"], h)
+
+
+# --------------------------------------------------------------- losses ----
+
+
+def gnn_node_loss(params, cfg: GNNConfig, batch):
+    """Node-classification CE (full-graph shapes)."""
+    logits = gnn_forward_full(
+        params, cfg, batch["node_feat"], batch["edge_index"], batch.get("positions")
+    )
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    mask = batch.get("train_mask")
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0), {}
+    return jnp.mean(nll), {}
+
+
+def gnn_energy_loss(params, cfg: GNNConfig, batch):
+    """Molecular energy regression (molecule shapes): batched graphs are
+    flattened to one disjoint graph; per-graph readout = masked segment sum."""
+    out = gnn_forward_full(
+        params,
+        cfg,
+        batch["node_feat"],
+        batch["edge_index"],
+        batch.get("positions"),
+    )  # (B·M, n_out)
+    graph_id = batch["graph_id"]
+    n_graphs = batch["energy"].shape[0]
+    node_e = out[:, 0] * batch["node_mask"]
+    energy = jax.ops.segment_sum(node_e, graph_id, num_segments=n_graphs)
+    loss = jnp.mean((energy - batch["energy"]) ** 2)
+    return loss, {"energy_mae": jnp.mean(jnp.abs(energy - batch["energy"]))}

@@ -1,0 +1,173 @@
+"""Partition-parallel GNN message passing with halo exchange (§Perf B1).
+
+Baseline full-graph training shards nodes/edges over the data axis and
+lets GSPMD insert all-reduces of the ENTIRE (N, C) feature array per
+layer (measured: gin-tu/ogb_products is 3000× collective-bound vs
+compute).  This module applies the paper's own insight — min-edge-cut
+graph partitioning (GNN-PE Alg. 1 line 1) — to the training step:
+
+  * each shard owns N/m nodes and the edges whose destination it owns;
+  * per layer, each shard publishes only its *boundary* rows (nodes
+    referenced by other shards); one ``all_gather`` of (B, C) blocks
+    replaces the (N, C) all-reduce;
+  * local edges aggregate via local ``segment_sum`` over
+    [local ∪ halo] rows — no other communication.
+
+Collective bytes per layer drop from N·C to m·B·C, i.e. by the
+boundary fraction (≈ edge cut), which the partitioner minimizes.
+``build_partition_batch`` constructs the metadata from a real
+Partitioning; the dry-run synthesizes shapes with a configured
+boundary fraction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .gnn import GNNConfig, _gin_layer, _mlp_apply, _sage_layer
+
+__all__ = ["partition_gnn_loss", "build_partition_batch"]
+
+
+def _forward_local(params, cfg: GNNConfig, x_loc, halo_flat, edge_index, boundary_index, axis_names):
+    """One shard's forward.  x_loc (N_loc, d_in); edge_index (E_loc, 2)
+    indexes [0, N_loc + H): local rows then halo rows."""
+    h = _mlp_apply(params["encode"], x_loc.astype(cfg.compute_dtype))
+    n_loc = h.shape[0]
+    src, dst = edge_index[:, 0], edge_index[:, 1]
+    for p in params["layers"]:
+        # halo exchange: publish boundary rows, gather everyone's blocks
+        bound = h[boundary_index]  # (B, C)
+        all_b = jax.lax.all_gather(bound, axis_names, axis=0, tiled=True)  # (m·B, C)
+        halo = all_b[halo_flat]  # (H, C)
+        h_ext = jnp.concatenate([h, halo], axis=0)
+        from .gnn import _agg
+
+        if cfg.kind == "gin":
+            nbr = _agg(h_ext[src], dst, n_loc, "sum")
+            h = _mlp_apply(p["mlp"], (1.0 + p["eps"]) * h_ext[:n_loc] + nbr)
+        else:  # sage-style default for other kinds in partition mode
+            nbr = _agg(h_ext[src], dst, n_loc, cfg.aggregator if cfg.kind == "sage" else "sum")
+            w_self = p.get("w_self")
+            if w_self is not None:
+                h = jax.nn.relu(
+                    h_ext[:n_loc] @ p["w_self"].astype(h.dtype)
+                    + nbr @ p["w_nbr"].astype(h.dtype)
+                    + p["b"].astype(h.dtype)
+                )
+            else:
+                h = jax.nn.relu(h_ext[:n_loc] + nbr)
+    return _mlp_apply(params["readout"], h)
+
+
+def partition_gnn_loss(params, cfg: GNNConfig, batch, mesh):
+    """Sharded node-classification CE with halo exchange.
+
+    batch (leading dim m = data shards, sharded over the data axes):
+      node_feat (m, N_loc, d_in)   labels (m, N_loc)  label_mask (m, N_loc)
+      edge_index (m, E_loc, 2)     boundary_index (m, B)   halo_flat (m, H)
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def shard_fn(node_feat, labels, label_mask, edge_index, boundary_index, halo_flat):
+        x = node_feat[0]
+        logits = _forward_local(
+            params, cfg, x, halo_flat[0], edge_index[0], boundary_index[0], data_axes
+        )
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(logp, labels[0][:, None], axis=1)[:, 0]
+        m = label_mask[0].astype(jnp.float32)
+        loss_sum = jnp.sum(nll * m)
+        cnt = jnp.sum(m)
+        loss_sum = jax.lax.psum(loss_sum, data_axes)
+        cnt = jax.lax.psum(cnt, data_axes)
+        return (loss_sum / jnp.maximum(cnt, 1.0))[None]
+
+    spec = P(data_axes)
+    loss = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(
+            P(data_axes, None, None), P(data_axes, None), P(data_axes, None),
+            P(data_axes, None, None), P(data_axes, None), P(data_axes, None),
+        ),
+        out_specs=spec,
+        check_vma=False,
+    )(
+        batch["node_feat"], batch["labels"], batch["label_mask"],
+        batch["edge_index"], batch["boundary_index"], batch["halo_flat"],
+    )
+    return jnp.mean(loss), {}
+
+
+def build_partition_batch(g, feat, labels, partitioning, n_shards: int):
+    """Construct halo-exchange metadata from a real Partitioning (tests +
+    examples; the dry-run synthesizes the same shapes)."""
+    assign = partitioning.assignment
+    locs = [np.nonzero(assign == s)[0] for s in range(n_shards)]
+    n_loc = max(len(l) for l in locs) + 1  # +1: reserved zero row for edge padding
+    # boundary rows per shard: rows referenced by other shards' edges
+    e = g.edge_array()
+    both = np.concatenate([e, e[:, ::-1]], 0)  # directed (src, dst)
+    cross = assign[both[:, 0]] != assign[both[:, 1]]
+    boundary_sets = [set() for _ in range(n_shards)]
+    for u, v in both[cross]:
+        boundary_sets[assign[u]].add(int(u))
+    B = max(max((len(b) for b in boundary_sets), default=1), 1)
+    H_per = [int(np.sum(cross & (assign[both[:, 1]] == s))) for s in range(n_shards)]
+    H = max(max(H_per), 1)
+    E_loc = max(int(np.sum(assign[both[:, 1]] == s)) for s in range(n_shards))
+
+    local_slot = -np.ones(g.n_vertices, np.int64)
+    for s, l in enumerate(locs):
+        local_slot[l] = np.arange(len(l))
+    bound_lists = [sorted(b) for b in boundary_sets]
+    bound_pos = {}
+    for s, bl in enumerate(bound_lists):
+        for i, u in enumerate(bl):
+            bound_pos[u] = i
+
+    node_feat = np.zeros((n_shards, n_loc, feat.shape[1]), np.float32)
+    lab = np.zeros((n_shards, n_loc), np.int32)
+    lmask = np.zeros((n_shards, n_loc), bool)
+    edge_index = np.zeros((n_shards, E_loc, 2), np.int32)
+    boundary_index = np.zeros((n_shards, B), np.int32)
+    halo_flat = np.zeros((n_shards, H), np.int32)
+    halo_lookup = [dict() for _ in range(n_shards)]
+    e_cnt = [0] * n_shards
+    for s in range(n_shards):
+        node_feat[s, : len(locs[s])] = feat[locs[s]]
+        lab[s, : len(locs[s])] = labels[locs[s]]
+        lmask[s, : len(locs[s])] = True
+        for i, u in enumerate(bound_lists[s]):
+            boundary_index[s, i] = local_slot[u]
+    for u, v in both:
+        s = assign[v]
+        su = assign[u]
+        if su == s:
+            src = int(local_slot[u])
+        else:
+            # halo slot for u on shard s
+            hl = halo_lookup[s]
+            if u not in hl:
+                pos = len(hl)
+                hl[u] = pos
+                halo_flat[s, pos] = su * B + bound_pos[int(u)]
+            src = n_loc + hl[u]
+        edge_index[s, e_cnt[s]] = (src, int(local_slot[v]))
+        e_cnt[s] += 1
+    # padded edge slots self-aggregate on the reserved (always-masked,
+    # zero-feature) last local row — provably inert
+    for s in range(n_shards):
+        if e_cnt[s] < E_loc:
+            edge_index[s, e_cnt[s]:] = (n_loc - 1, n_loc - 1)
+    return {
+        "node_feat": node_feat,
+        "labels": lab,
+        "label_mask": lmask,
+        "edge_index": edge_index,
+        "boundary_index": boundary_index,
+        "halo_flat": halo_flat,
+    }

@@ -1,0 +1,131 @@
+"""DCN-v2 recsys model (cross network + deep MLP over embedding bags).
+
+JAX has no ``nn.EmbeddingBag`` — the bag is built from ``jnp.take`` +
+masked reduction (the multi-hot path) as required by the assignment.
+Tables are stacked (n_fields, vocab, dim) and sharded over the ``model``
+axis on the vocab dimension; the lookup is the hot path.
+
+The fused cross layer ``x₀ ⊙ (W xₗ + b) + xₗ`` has a Pallas kernel
+(kernels/cross_interact); this file is the XLA path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.context import maybe_shard
+from .common import dense_init
+
+__all__ = ["RecsysConfig", "init_dcn_params", "dcn_forward", "dcn_loss", "retrieval_scores"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 16
+    vocab_per_field: int = 1_000_000
+    n_cross_layers: int = 3
+    mlp_dims: tuple = (1024, 1024, 512)
+    multi_hot: int = 1  # bag size (1 = single-valued fields)
+    retrieval_dim: int = 64
+    dtype: Any = "float32"
+
+    @property
+    def x0_dim(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def init_dcn_params(key, cfg: RecsysConfig):
+    ks = jax.random.split(key, 6 + cfg.n_cross_layers + len(cfg.mlp_dims))
+    d0 = cfg.x0_dim
+    p = {
+        "tables": dense_init(ks[0], (cfg.n_sparse, cfg.vocab_per_field, cfg.embed_dim), scale=0.02),
+        "cross": [
+            {"w": dense_init(ks[1 + i], (d0, d0)), "b": jnp.zeros((d0,))}
+            for i in range(cfg.n_cross_layers)
+        ],
+    }
+    dims = (d0,) + tuple(cfg.mlp_dims)
+    p["mlp"] = [
+        {"w": dense_init(ks[1 + cfg.n_cross_layers + i], (dims[i], dims[i + 1])), "b": jnp.zeros((dims[i + 1],))}
+        for i in range(len(cfg.mlp_dims))
+    ]
+    p["head"] = dense_init(ks[-2], (cfg.mlp_dims[-1], 1))
+    p["retrieval_proj"] = dense_init(ks[-1], (cfg.mlp_dims[-1], cfg.retrieval_dim))
+    return p
+
+
+def embedding_bag(tables, ids, mask=None):
+    """EmbeddingBag(sum): tables (F, V, E); ids (B, F) or (B, F, nnz).
+
+    take + masked segment reduction — JAX-native EmbeddingBag.
+    """
+    if ids.ndim == 2:
+        out = jnp.take_along_axis(
+            tables[None], ids[:, :, None, None], axis=2
+        )[:, :, 0, :]  # (B, F, E)
+        return out
+    # multi-hot: (B, F, nnz) + mask
+    gathered = jnp.take_along_axis(
+        tables[None], ids[:, :, :, None], axis=2
+    )  # (B, F, nnz, E)
+    if mask is not None:
+        gathered = gathered * mask[..., None].astype(gathered.dtype)
+    return gathered.sum(axis=2)
+
+
+def _cross_layer(x0, x, w, b):
+    """DCN-v2 cross: x₀ ⊙ (W x + b) + x."""
+    return x0 * (x @ w.astype(x.dtype) + b.astype(x.dtype)) + x
+
+
+def dcn_forward(params, dense, sparse_ids, cfg: RecsysConfig, sparse_mask=None, return_emb=False):
+    dtype = cfg.compute_dtype
+    dense = maybe_shard(dense.astype(dtype), ("pod", "data"), None)
+    emb = embedding_bag(params["tables"].astype(dtype), sparse_ids, sparse_mask)  # (B,F,E)
+    emb = maybe_shard(emb, ("pod", "data"), None, None)
+    x0 = jnp.concatenate([jnp.log1p(jnp.abs(dense)), emb.reshape(emb.shape[0], -1)], axis=-1)
+    x = x0
+    for c in params["cross"]:
+        x = _cross_layer(x0, x, c["w"], c["b"])
+    h = x
+    for l in params["mlp"]:
+        h = jax.nn.relu(h @ l["w"].astype(dtype) + l["b"].astype(dtype))
+        h = maybe_shard(h, ("pod", "data"), "model")
+    logit = (h @ params["head"].astype(dtype))[:, 0]
+    if return_emb:
+        user = h @ params["retrieval_proj"].astype(dtype)  # (B, retrieval_dim)
+        return logit, user
+    return logit
+
+
+def dcn_loss(params, batch, cfg: RecsysConfig):
+    logit = dcn_forward(params, batch["dense"], batch["sparse"], cfg, batch.get("sparse_mask"))
+    y = batch["label"].astype(jnp.float32)
+    z = logit.astype(jnp.float32)
+    # numerically-stable BCE with logits
+    loss = jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+    return loss, {"loss": loss}
+
+
+def retrieval_scores(params, dense, sparse_ids, cand_emb, cfg: RecsysConfig, top_k: int = 100):
+    """Score one (or few) queries against a large candidate table.
+
+    cand_emb (N_cand, retrieval_dim) is sharded over 'model'; the matmul
+    reduces over retrieval_dim locally and top-k runs over the sharded
+    candidate axis (batched dot, NOT a loop).
+    """
+    _, user = dcn_forward(params, dense, sparse_ids, cfg, return_emb=True)  # (B, R)
+    cand = maybe_shard(cand_emb.astype(user.dtype), "model", None)
+    scores = user @ cand.T  # (B, N_cand)
+    scores = maybe_shard(scores, ("pod", "data"), "model")
+    vals, idx = jax.lax.top_k(scores, top_k)
+    return vals, idx

@@ -1,0 +1,531 @@
+"""Decoder-only transformer LM family (pure JAX, scan-over-layers).
+
+Covers the assigned LM architectures with one config:
+  * dense GQA + RoPE (minitron-4b, command-r-plus-104b)
+  * local:global sliding-window mix (gemma3-1b, 5:1 with period 6)
+  * MLA latent-KV attention (deepseek-v2-lite) incl. the *absorbed*
+    decode path over the compressed cache
+  * MoE FFN via EP shard_map (deepseek-v2-lite, qwen3-moe) — see moe.py
+
+Attention is chunked (online-softmax scan over KV blocks) so 32k-token
+prefill never materializes an (S×S) score matrix; the Pallas
+``flash_attention`` kernel implements the same math for TPU hot paths
+(kernels/flash_attention), with this scan as the XLA reference/dry-run path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.context import maybe_shard
+from .common import apply_rope, cross_entropy_loss, dense_init, rms_norm
+from .moe import MoEConfig, init_moe_params, moe_block
+
+__all__ = [
+    "TransformerConfig",
+    "init_lm_params",
+    "lm_forward",
+    "lm_loss",
+    "init_cache",
+    "decode_step",
+]
+
+_BIG = jnp.asarray(2**30, jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab: int = 1024
+    rope_theta: float = 10000.0
+    attention: str = "full"  # "full" | "local_global"
+    window: int = 1024
+    global_period: int = 6  # every Nth layer is global (gemma3: 6 ⇒ 5:1)
+    kv_chunk: int = 1024
+    # --- MLA (deepseek) ---
+    use_mla: bool = False
+    kv_lora_rank: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+    # --- MoE ---
+    moe: MoEConfig | None = None
+    first_dense: int = 0  # leading dense layers before the MoE stack
+    # --- misc ---
+    tie_embeddings: bool = False
+    dtype: Any = "bfloat16"
+    param_dtype: Any = "float32"  # bf16 for ≥100B-class archs (fp32 m/v kept)
+    grad_accum: int = 1  # microbatches per step (activation memory ÷ accum)
+    remat: bool = True
+    # §Perf hillclimb switches (EXPERIMENTS.md §Perf logs before/after):
+    remat_attention: bool = False  # recompute chunk scores in bwd (no stash)
+    loss_chunk: int = 0  # vocab-chunked CE (0 = off): logits never materialize
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def q_dim(self):
+        if self.use_mla:
+            return self.n_heads * (self.nope_head_dim + self.rope_head_dim)
+        return self.n_heads * self.head_dim
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embeddings + layers)."""
+        D, V = self.d_model, self.vocab
+        total = V * D * (1 if self.tie_embeddings else 2)
+        for li in range(self.n_layers):
+            if self.use_mla:
+                attn = D * self.q_dim  # wq
+                attn += D * (self.kv_lora_rank + self.rope_head_dim)
+                attn += self.n_heads * self.kv_lora_rank * (self.nope_head_dim + self.v_head_dim)
+                attn += self.n_heads * self.v_head_dim * D
+            else:
+                attn = D * self.q_dim + 2 * D * self.n_kv_heads * self.head_dim
+                attn += self.q_dim * D
+            if self.moe is not None and li >= self.first_dense:
+                m = self.moe
+                ffn = D * m.n_experts  # router
+                ffn += m.n_experts * 3 * D * m.d_ff_expert
+                ffn += m.n_shared * 3 * D * m.d_ff_expert
+            else:
+                ffn = 3 * D * self.d_ff
+            total += attn + ffn + 2 * D
+        return total + D
+
+    def n_active_params(self) -> int:
+        """Params touched per token (MoE: top-k + shared experts only)."""
+        if self.moe is None:
+            return self.n_params()
+        D = self.d_model
+        m = self.moe
+        per_layer_all = m.n_experts * 3 * D * m.d_ff_expert
+        per_layer_active = m.top_k * 3 * D * m.d_ff_expert
+        moe_layers = self.n_layers - self.first_dense
+        return self.n_params() - moe_layers * (per_layer_all - per_layer_active)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: TransformerConfig, moe_layer: bool):
+    ks = jax.random.split(key, 12)
+    D = cfg.d_model
+    pd = jnp.dtype(cfg.param_dtype)
+    p = {"norm1": jnp.zeros((D,), pd), "norm2": jnp.zeros((D,), pd)}
+    if cfg.use_mla:
+        p["wq"] = dense_init(ks[0], (D, cfg.q_dim), dtype=pd)
+        p["w_dkv"] = dense_init(ks[1], (D, cfg.kv_lora_rank), dtype=pd)
+        p["w_krope"] = dense_init(ks[2], (D, cfg.rope_head_dim), dtype=pd)
+        p["w_uk"] = dense_init(ks[3], (cfg.n_heads, cfg.kv_lora_rank, cfg.nope_head_dim), dtype=pd)
+        p["w_uv"] = dense_init(ks[4], (cfg.n_heads, cfg.kv_lora_rank, cfg.v_head_dim), dtype=pd)
+        p["wo"] = dense_init(ks[5], (cfg.n_heads * cfg.v_head_dim, D), dtype=pd)
+    else:
+        kv = cfg.n_kv_heads * cfg.head_dim
+        p["wq"] = dense_init(ks[0], (D, cfg.q_dim), dtype=pd)
+        p["wk"] = dense_init(ks[1], (D, kv), dtype=pd)
+        p["wv"] = dense_init(ks[2], (D, kv), dtype=pd)
+        p["wo"] = dense_init(ks[5], (cfg.q_dim, D), dtype=pd)
+    if moe_layer:
+        p["moe"] = init_moe_params(ks[6], D, cfg.moe, dtype=pd)
+    else:
+        p["w1"] = dense_init(ks[7], (D, cfg.d_ff), dtype=pd)
+        p["w3"] = dense_init(ks[8], (D, cfg.d_ff), dtype=pd)
+        p["w2"] = dense_init(ks[9], (cfg.d_ff, D), dtype=pd)
+    return p
+
+
+def init_lm_params(key, cfg: TransformerConfig):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    pd = jnp.dtype(cfg.param_dtype)
+    params = {
+        "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), scale=0.02, dtype=pd),
+        "final_norm": jnp.zeros((cfg.d_model,), pd),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab), scale=0.02, dtype=pd)
+    # leading dense layers (unstacked), then the scanned (stacked) stack
+    prefix = []
+    for i in range(cfg.first_dense):
+        prefix.append(_init_layer(ks[2 + i], cfg, moe_layer=False))
+    if prefix:
+        params["prefix_layers"] = prefix
+    n_stack = cfg.n_layers - cfg.first_dense
+    moe_layer = cfg.moe is not None
+    stack = [
+        _init_layer(ks[2 + cfg.first_dense + i], cfg, moe_layer=moe_layer) for i in range(n_stack)
+    ]
+    params["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *stack)
+    return params
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+def chunked_attention(q, k, v, q_pos, kv_pos, window, chunk: int, remat_body: bool = False):
+    """Online-softmax attention over KV chunks (flash-style, pure jnp).
+
+    q: (B, Sq, Hkv, G, dh) — grouped query heads
+    k: (B, Skv, Hkv, dh)   v: (B, Skv, Hkv, dv)
+    q_pos: (Sq,) int32     kv_pos: (Skv,) int32 (big = masked slot)
+    window: int or None — sliding-window width (None = full causal)
+    remat_body: checkpoint each chunk step — the backward recomputes the
+    (Sq, chunk) score tile instead of stashing it in fp32 (§Perf A1).
+    """
+    B, Sq, Hkv, G, dh = q.shape
+    Skv = k.shape[1]
+    dv = v.shape[-1]
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    n_chunks = max((Skv + chunk - 1) // chunk, 1)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=2**30)
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, Hkv, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, Hkv, dv), 1, 0)
+    pc = kv_pos.reshape(n_chunks, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kci, vci, pci = xs
+        s = jnp.einsum(
+            "bqhgd,bkhd->bqhgk", q, kci, preferred_element_type=jnp.float32
+        ) * scale  # (B,Sq,Hkv,G,C)
+        causal = pci[None, :] <= q_pos[:, None]  # (Sq, C)
+        if window is not None:
+            causal &= (q_pos[:, None] - pci[None, :]) < window
+        s = s + jnp.where(causal, 0.0, -1e30)[None, :, None, None, :]
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vci, preferred_element_type=jnp.float32
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, dv), jnp.float32)
+    if remat_body:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype).reshape(B, Sq, Hkv * G, dv)
+
+
+def _gqa_qkv(x, p, cfg: TransformerConfig, positions):
+    B, S, _ = x.shape
+    # TP constraint on the flat head dim (head counts need not divide the
+    # model axis; the flattened projection always does)
+    q2 = maybe_shard(x @ p["wq"].astype(x.dtype), ("pod", "data"), None, "model")
+    k2 = maybe_shard(x @ p["wk"].astype(x.dtype), ("pod", "data"), None, "model")
+    v2 = maybe_shard(x @ p["wv"].astype(x.dtype), ("pod", "data"), None, "model")
+    q = q2.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k2.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v2.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions[None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[None, :], cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_train(x, p, cfg: TransformerConfig, positions, is_global):
+    """Full-sequence attention for train/prefill; handles GQA + MLA."""
+    B, S, D = x.shape
+    if cfg.use_mla:
+        nd, rd = cfg.nope_head_dim, cfg.rope_head_dim
+        q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.n_heads, nd + rd)
+        q_nope, q_rope = q[..., :nd], q[..., nd:]
+        q_rope = apply_rope(q_rope, positions[None, :], cfg.rope_theta)
+        c_kv = x @ p["w_dkv"].astype(x.dtype)  # (B,S,r)
+        k_rope = apply_rope(
+            (x @ p["w_krope"].astype(x.dtype))[:, :, None, :], positions[None, :], cfg.rope_theta
+        )  # (B,S,1,rd)
+        k_nope = jnp.einsum("bsr,hrn->bshn", c_kv, p["w_uk"].astype(x.dtype))
+        vv = jnp.einsum("bsr,hrn->bshn", c_kv, p["w_uv"].astype(x.dtype))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, cfg.n_heads, rd))], -1)
+        qq = jnp.concatenate([q_nope, q_rope], -1)[:, :, :, None, :]  # G=1
+        qq = qq.reshape(B, S, cfg.n_heads, 1, nd + rd)
+        out = chunked_attention(qq, k, vv, positions, positions, None, cfg.kv_chunk, cfg.remat_attention)
+        out = out.reshape(B, S, cfg.n_heads * cfg.v_head_dim)
+    else:
+        q, k, v = _gqa_qkv(x, p, cfg, positions)
+        G = cfg.n_heads // cfg.n_kv_heads
+        q = q.reshape(B, S, cfg.n_kv_heads, G, cfg.head_dim)
+        window = None
+        if cfg.attention == "local_global":
+            # traced per-layer switch: big window ≡ global attention
+            window = jnp.where(is_global, _BIG, cfg.window)
+        out = chunked_attention(q, k, v, positions, positions, window, cfg.kv_chunk, cfg.remat_attention)
+        out = out.reshape(B, S, cfg.q_dim)
+    out = maybe_shard(out, ("pod", "data"), None, "model")
+    return out @ p["wo"].astype(x.dtype)
+
+
+def _mlp(x, p, cfg: TransformerConfig, mesh):
+    if "moe" in p:
+        B, S, D = x.shape
+        out, aux = moe_block(x.reshape(B * S, D), p["moe"], cfg.moe, mesh)
+        return out.reshape(B, S, D), aux
+    h = jax.nn.silu(x @ p["w1"].astype(x.dtype)) * (x @ p["w3"].astype(x.dtype))
+    h = maybe_shard(h, ("pod", "data"), None, "model")
+    return h @ p["w2"].astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def _layer(x, p, cfg: TransformerConfig, positions, is_global, mesh):
+    h = rms_norm(x, p["norm1"])
+    x = x + _attn_train(h, p, cfg, positions, is_global)
+    h = rms_norm(x, p["norm2"])
+    y, aux = _mlp(h, p, cfg, mesh)
+    return x + y, aux
+
+
+def chunked_lm_head_loss(x, head, labels, chunk: int):
+    """Vocab-chunked CE (§Perf A2): online logsumexp over head chunks so
+    the (B, S, V) logits tensor never exists.  Each chunk's partial matmul
+    is checkpointed — the backward recomputes it (flash-CE)."""
+    B, S, D = x.shape
+    V = head.shape[1]
+    n_chunks = (V + chunk - 1) // chunk
+    Vp = n_chunks * chunk
+    headp = jnp.pad(head, ((0, 0), (0, Vp - V)))
+    x32 = x
+
+    def body(carry, i):
+        m, l, lab = carry
+        h = jax.lax.dynamic_slice(headp, (0, i * chunk), (D, chunk))
+        logits = jnp.einsum("bsd,dv->bsv", x32, h, preferred_element_type=jnp.float32)
+        base = i * chunk
+        valid = (base + jnp.arange(chunk)) < V
+        logits = jnp.where(valid[None, None, :], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        l_new = l * jnp.exp(m - m_new) + jnp.exp(logits - m_new[..., None]).sum(-1)
+        in_chunk = (labels >= base) & (labels < base + chunk)
+        off = jnp.clip(labels - base, 0, chunk - 1)
+        lab_logit = jnp.take_along_axis(logits, off[..., None], axis=-1)[..., 0]
+        lab = jnp.where(in_chunk, lab_logit, lab)
+        return (m_new, l_new, lab), None
+
+    m0 = jnp.full((B, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, S), jnp.float32)
+    lab0 = jnp.zeros((B, S), jnp.float32)
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (m, l, lab), _ = jax.lax.scan(fn, (m0, l0, lab0), jnp.arange(n_chunks))
+    nll = (jnp.log(jnp.maximum(l, 1e-30)) + m) - lab
+    return jnp.mean(nll)
+
+
+def lm_forward(params, tokens, cfg: TransformerConfig, mesh=None, return_hidden: bool = False):
+    """tokens (B, S) → logits (B, S, V)."""
+    B, S = tokens.shape
+    dtype = cfg.compute_dtype
+    x = params["embed"].astype(dtype)[tokens]
+    x = maybe_shard(x, ("pod", "data"), None, None)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    aux_total = jnp.zeros((), jnp.float32)
+    # unstacked prefix (dense) layers
+    for p in params.get("prefix_layers", []):
+        x, aux = _layer(x, p, cfg, positions, jnp.asarray(True), mesh)
+        aux_total += aux
+
+    L = cfg.n_layers - cfg.first_dense
+    offs = cfg.first_dense + np.arange(L)
+    is_global = jnp.asarray(
+        ((offs + 1) % cfg.global_period) == 0 if cfg.attention == "local_global" else np.ones(L, bool)
+    )
+
+    def body(carry, xs):
+        x, aux_acc = carry
+        layer_p, ig = xs
+        x, aux = _layer(x, layer_p, cfg, positions, ig, mesh)
+        return (x, aux_acc + aux), None
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) if cfg.remat else body
+    (x, aux_total), _ = jax.lax.scan(fn, (x, aux_total), (params["layers"], is_global))
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if return_hidden:
+        return x, head, aux_total
+    logits = x @ head.astype(dtype)
+    logits = maybe_shard(logits, ("pod", "data"), None, "model")
+    return logits, aux_total
+
+
+def lm_loss(params, batch, cfg: TransformerConfig, mesh=None):
+    if cfg.loss_chunk > 0:
+        x, head, aux = lm_forward(params, batch["tokens"], cfg, mesh, return_hidden=True)
+        loss = chunked_lm_head_loss(x, head.astype(x.dtype), batch["labels"], cfg.loss_chunk)
+        return loss + 0.01 * aux, {"loss": loss, "aux": aux}
+    logits, aux = lm_forward(params, batch["tokens"], cfg, mesh)
+    loss = cross_entropy_loss(logits, batch["labels"])
+    return loss + 0.01 * aux, {"loss": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# decode (serve_step)
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    L = cfg.n_layers
+    if cfg.use_mla:
+        return {
+            "ckv": jnp.zeros((L, batch, max_len, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((L, batch, max_len, cfg.rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def _decode_attn_gqa(x, p, cfg, cache_k, cache_v, cur_len, is_global):
+    """x (B,1,D); cache_k/v (B,Smax,Hkv,dh). Returns out, new_k_row, new_v_row."""
+    B = x.shape[0]
+    Smax = cache_k.shape[1]
+    pos = jnp.full((1,), cur_len, jnp.int32)
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, pos[None, :], cfg.rope_theta)
+    k = apply_rope(k, pos[None, :], cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(cache_k, k, (0, cur_len, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v, (0, cur_len, 0, 0))
+    G = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, 1, cfg.n_kv_heads, G, cfg.head_dim)
+    kv_pos = jnp.arange(Smax, dtype=jnp.int32)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    s = jnp.einsum("bqhgd,bkhd->bhgk", qg, ck, preferred_element_type=jnp.float32) * scale
+    mask = kv_pos <= cur_len
+    if cfg.attention == "local_global":
+        win = jnp.where(is_global, _BIG, cfg.window)
+        mask &= (cur_len - kv_pos) < win
+    s = s + jnp.where(mask, 0.0, -1e30)[None, None, None, :]
+    a = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", a, cv, preferred_element_type=jnp.float32)
+    out = out.astype(x.dtype).reshape(B, 1, cfg.q_dim)
+    return out @ p["wo"].astype(x.dtype), ck, cv
+
+
+def _decode_attn_mla(x, p, cfg, cache_ckv, cache_krope, cur_len):
+    """Absorbed MLA decode over the compressed latent cache."""
+    B = x.shape[0]
+    Smax = cache_ckv.shape[1]
+    nd, rd = cfg.nope_head_dim, cfg.rope_head_dim
+    pos = jnp.full((1,), cur_len, jnp.int32)
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, 1, cfg.n_heads, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, pos[None, :], cfg.rope_theta)
+    c_kv_new = (x @ p["w_dkv"].astype(x.dtype)).reshape(B, 1, cfg.kv_lora_rank)
+    krope_new = apply_rope(
+        (x @ p["w_krope"].astype(x.dtype))[:, :, None, :], pos[None, :], cfg.rope_theta
+    ).reshape(B, 1, rd)
+    ckv = jax.lax.dynamic_update_slice(cache_ckv, c_kv_new, (0, cur_len, 0))
+    krope = jax.lax.dynamic_update_slice(cache_krope, krope_new, (0, cur_len, 0))
+    # absorb W_uk into the query → score directly against the latent cache
+    q_lat = jnp.einsum("bqhn,hrn->bhr", q_nope, p["w_uk"].astype(x.dtype))
+    s = jnp.einsum("bhr,bsr->bhs", q_lat, ckv, preferred_element_type=jnp.float32)
+    s += jnp.einsum("bqhr,bsr->bhs", q_rope, krope, preferred_element_type=jnp.float32)
+    s *= 1.0 / np.sqrt(nd + rd)
+    kv_pos = jnp.arange(Smax, dtype=jnp.int32)
+    s = s + jnp.where(kv_pos <= cur_len, 0.0, -1e30)[None, None, :]
+    a = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", a, ckv, preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bhr,hrn->bhn", ctx_lat, p["w_uv"].astype(x.dtype))
+    out = out.reshape(B, 1, cfg.n_heads * cfg.v_head_dim)
+    return out @ p["wo"].astype(x.dtype), ckv, krope
+
+
+def decode_step(params, cache, tokens, cur_len, cfg: TransformerConfig, mesh=None):
+    """One-token decode: tokens (B,) int32, cur_len scalar → logits (B, V)."""
+    B = tokens.shape[0]
+    dtype = cfg.compute_dtype
+    x = params["embed"].astype(dtype)[tokens][:, None, :]  # (B,1,D)
+    x = maybe_shard(x, ("pod", "data"), None, None)
+    assert cfg.first_dense == 0 or not cfg.use_mla or True
+    L = cfg.n_layers - cfg.first_dense
+    offs = cfg.first_dense + np.arange(L)
+    is_global = jnp.asarray(
+        ((offs + 1) % cfg.global_period) == 0 if cfg.attention == "local_global" else np.ones(L, bool)
+    )
+
+    # prefix (unstacked) layers use the first cfg.first_dense cache rows
+    new_prefix = []
+    for i, p in enumerate(params.get("prefix_layers", [])):
+        h = rms_norm(x, p["norm1"])
+        if cfg.use_mla:
+            o, ck, kr = _decode_attn_mla(h, p, cfg, cache["ckv"][i], cache["krope"][i], cur_len)
+            new_prefix.append((ck, kr))
+        else:
+            o, ck, cv = _decode_attn_gqa(h, p, cfg, cache["k"][i], cache["v"][i], cur_len, True)
+            new_prefix.append((ck, cv))
+        x = x + o
+        h = rms_norm(x, p["norm2"])
+        y, _ = _mlp(h, p, cfg, mesh)
+        x = x + y
+
+    fd = cfg.first_dense
+
+    def body(x, xs):
+        if cfg.use_mla:
+            layer_p, ckv_l, krope_l, ig = xs
+            h = rms_norm(x, layer_p["norm1"])
+            o, ck, kr = _decode_attn_mla(h, layer_p, cfg, ckv_l, krope_l, cur_len)
+            x = x + o
+            h = rms_norm(x, layer_p["norm2"])
+            y, _ = _mlp(h, layer_p, cfg, mesh)
+            return x + y, (ck, kr)
+        layer_p, k_l, v_l, ig = xs
+        h = rms_norm(x, layer_p["norm1"])
+        o, ck, cv = _decode_attn_gqa(h, layer_p, cfg, k_l, v_l, cur_len, ig)
+        x = x + o
+        h = rms_norm(x, layer_p["norm2"])
+        y, _ = _mlp(h, layer_p, cfg, mesh)
+        return x + y, (ck, cv)
+
+    if cfg.use_mla:
+        xs = (params["layers"], cache["ckv"][fd:], cache["krope"][fd:], is_global)
+    else:
+        xs = (params["layers"], cache["k"][fd:], cache["v"][fd:], is_global)
+    x, updated = jax.lax.scan(body, x, xs)
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(dtype))[:, 0, :]
+    logits = maybe_shard(logits, ("pod", "data"), "model")
+
+    if cfg.use_mla:
+        new_cache = {
+            "ckv": jnp.concatenate(
+                [jnp.stack([c for c, _ in new_prefix]), updated[0]] if new_prefix else [updated[0]]
+            ),
+            "krope": jnp.concatenate(
+                [jnp.stack([r for _, r in new_prefix]), updated[1]] if new_prefix else [updated[1]]
+            ),
+        }
+    else:
+        new_cache = {
+            "k": jnp.concatenate(
+                [jnp.stack([c for c, _ in new_prefix]), updated[0]] if new_prefix else [updated[0]]
+            ),
+            "v": jnp.concatenate(
+                [jnp.stack([r for _, r in new_prefix]), updated[1]] if new_prefix else [updated[1]]
+            ),
+        }
+    return logits, new_cache

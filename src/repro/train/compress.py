@@ -1,0 +1,79 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Two codecs applied to the gradient pytree *before* the (implicit) DP
+all-reduce, both with error-feedback residual state so compression error
+doesn't bias the optimizer (Karimireddy et al., arXiv:1901.09847):
+
+* ``int8``  — per-tensor absmax-scaled int8 quantization (4× traffic cut)
+* ``topk``  — magnitude top-k sparsification (k fraction kept)
+
+``compress_grads`` returns the *decompressed* grads (what the update
+sees) plus the new residual — numerically exactly what a real
+compressed-collective implementation produces, so tests on CPU validate
+convergence behaviour end to end.  ``wire_bytes`` reports the traffic
+a real deployment would ship.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CompressionConfig", "init_residual", "compress_grads", "wire_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"  # none | int8 | topk
+    topk_frac: float = 0.01
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _int8_roundtrip(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_roundtrip(x, frac):
+    flat = x.reshape(-1)
+    k = max(int(flat.shape[0] * frac), 1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
+    return kept.reshape(x.shape)
+
+
+def compress_grads(grads, residual, cfg: CompressionConfig):
+    """→ (decompressed_grads, new_residual)."""
+    if cfg.kind == "none":
+        return grads, residual
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        if cfg.kind == "int8":
+            out = _int8_roundtrip(x)
+        elif cfg.kind == "topk":
+            out = _topk_roundtrip(x, cfg.topk_frac)
+        else:
+            raise ValueError(cfg.kind)
+        return out, x - out  # error feedback
+
+    pairs = jax.tree.map(one, grads, residual)
+    outs = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return outs, res
+
+
+def wire_bytes(params, cfg: CompressionConfig) -> int:
+    """Bytes a DP all-reduce would ship per step under this codec."""
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    if cfg.kind == "int8":
+        return n  # 1 byte/elem (+ negligible scales)
+    if cfg.kind == "topk":
+        return int(n * cfg.topk_frac) * 8  # value + index
+    return n * 4

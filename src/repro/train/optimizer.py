@@ -1,0 +1,65 @@
+"""AdamW + schedules, pure JAX (no optax in this environment)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "cosine_schedule", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def cosine_schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)))
+
+
+def adamw_init(params):
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, opt_state, params, cfg: OptConfig):
+    step = opt_state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, opt_state["m"], grads)
+    v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, opt_state["v"], grads)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - cfg.b1**t
+    bc2 = 1 - cfg.b2**t
+
+    def upd(p, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, {"lr": lr, "grad_norm": gn}

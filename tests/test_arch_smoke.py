@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, assert output shapes + no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (
+    build_step,
+    get_arch,
+    init_params,
+    input_specs,
+    list_archs,
+    make_batch,
+    opt_init,
+    resolve_config,
+)
+
+ALL = list_archs()
+
+
+def _finite(tree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(tree) if jnp.issubdtype(x.dtype, jnp.floating))
+
+
+@pytest.mark.parametrize("arch_name", ALL)
+def test_smoke_primary_shape(arch_name):
+    """One train step on each arch's first (training) shape."""
+    arch = get_arch(arch_name)
+    cell = arch.shapes[0]
+    cfg = resolve_config(arch, cell, smoke=True)
+    params = init_params(arch, cfg, jax.random.PRNGKey(0))
+    batch = make_batch(arch, cell, cfg, smoke=True)
+    step, takes_opt = build_step(arch, cell, cfg, mesh=None)
+    assert takes_opt
+    opt = opt_init(params)
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    assert _finite(new_params), f"{arch_name}: NaN in params after step"
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_opt["step"]) == 1
+    # shapes preserved
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)):
+        assert a.shape == b.shape
+
+
+@pytest.mark.parametrize(
+    "arch_name",
+    ["minitron-4b", "gemma3-1b", "command-r-plus-104b", "deepseek-v2-lite-16b", "qwen3-moe-235b-a22b"],
+)
+def test_lm_prefill_and_decode_smoke(arch_name):
+    arch = get_arch(arch_name)
+    cfg = resolve_config(arch, arch.cell("prefill_32k"), smoke=True)
+    params = init_params(arch, cfg, jax.random.PRNGKey(0))
+    # prefill
+    cell = arch.cell("prefill_32k")
+    batch = make_batch(arch, cell, cfg, smoke=True)
+    step, _ = build_step(arch, cell, cfg)
+    logits = jax.jit(step)(params, batch)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.vocab)
+    assert _finite(logits)
+    # decode
+    cell = arch.cell("decode_32k")
+    batch = make_batch(arch, cell, cfg, smoke=True)
+    step, _ = build_step(arch, cell, cfg)
+    logits, new_cache = jax.jit(step)(params, batch)
+    assert logits.shape == (batch["tokens"].shape[0], cfg.vocab)
+    assert _finite(logits)
+    # cache row written at cur_len
+    leaf = jax.tree.leaves(new_cache)[0]
+    assert leaf.shape == jax.tree.leaves(batch["cache"])[0].shape
+
+
+@pytest.mark.parametrize("arch_name", ["schnet", "graphsage-reddit", "mace", "gin-tu"])
+@pytest.mark.parametrize("shape", ["full_graph_sm", "minibatch_lg", "molecule"])
+def test_gnn_all_shapes_smoke(arch_name, shape):
+    arch = get_arch(arch_name)
+    cell = arch.cell(shape)
+    cfg = resolve_config(arch, cell, smoke=True)
+    params = init_params(arch, cfg, jax.random.PRNGKey(0))
+    batch = make_batch(arch, cell, cfg, smoke=True)
+    step, takes_opt = build_step(arch, cell, cfg)
+    opt = opt_init(params)
+    new_params, _, metrics = jax.jit(step)(params, opt, batch)
+    assert _finite(new_params)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_recsys_serve_and_retrieval_smoke():
+    arch = get_arch("dcn-v2")
+    cfg = resolve_config(arch, arch.cell("serve_p99"), smoke=True)
+    params = init_params(arch, cfg, jax.random.PRNGKey(0))
+    cell = arch.cell("serve_p99")
+    batch = make_batch(arch, cell, cfg, smoke=True)
+    step, _ = build_step(arch, cell, cfg)
+    scores = jax.jit(step)(params, batch)
+    assert scores.shape == (batch["dense"].shape[0],)
+    assert _finite(scores)
+    cell = arch.cell("retrieval_cand")
+    batch = make_batch(arch, cell, cfg, smoke=True)
+    step, _ = build_step(arch, cell, cfg)
+    vals, idx = jax.jit(step)(params, batch)
+    assert vals.shape[0] == 1 and idx.shape == vals.shape
+    assert _finite(vals)
+
+
+def test_full_config_param_counts():
+    """Analytic parameter counts of the FULL configs are in the published
+    ballparks (no allocation — pure arithmetic)."""
+    expected = {
+        "minitron-4b": (4.0e9, 6.5e9),  # 4.19B + 256k-vocab embeddings
+        "gemma3-1b": (0.9e9, 1.6e9),
+        "command-r-plus-104b": (95e9, 115e9),
+        "deepseek-v2-lite-16b": (13e9, 18e9),
+        "qwen3-moe-235b-a22b": (200e9, 250e9),
+    }
+    for name, (lo, hi) in expected.items():
+        arch = get_arch(name)
+        cfg = arch.make_config(False)
+        n = cfg.n_params()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B params out of range [{lo/1e9}, {hi/1e9}]"
+
+
+def test_moe_active_params():
+    cfg = get_arch("qwen3-moe-235b-a22b").make_config(False)
+    n_active = cfg.n_active_params()
+    assert 18e9 <= n_active <= 28e9, f"A22B active: {n_active/1e9:.2f}B"
+
+
+def test_registry_cells_complete():
+    from repro.configs import all_cells
+
+    cells = all_cells(include_skipped=True)
+    assert len(cells) == 40  # 5 LM × 4 + 4 GNN × 4 + 1 recsys × 4
+    skipped = [(a.name, c.name) for a, c in cells if c.skip]
+    assert sorted(skipped) == [
+        ("command-r-plus-104b", "long_500k"),
+        ("minitron-4b", "long_500k"),
+        ("qwen3-moe-235b-a22b", "long_500k"),
+    ]

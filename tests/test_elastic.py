@@ -1,0 +1,44 @@
+"""Elastic restore: a checkpoint written single-device restores onto an
+8-device mesh with production shardings (subprocess: device count differs)."""
+import subprocess
+import sys
+import textwrap
+
+
+def test_elastic_restore_across_device_counts(tmp_path):
+    # phase 1: write a checkpoint on the default (1-device) runtime
+    write = textwrap.dedent(
+        f"""
+        import jax, jax.numpy as jnp
+        from repro.dist.checkpoint import CheckpointManager
+        state = {{"w": jnp.arange(64.0).reshape(8, 8), "step": jnp.asarray(3)}}
+        CheckpointManager(r"{tmp_path}").save(3, state)
+        print("WROTE")
+        """
+    )
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"}
+    p1 = subprocess.run([sys.executable, "-c", write], capture_output=True, text=True, timeout=300, env=env)
+    assert "WROTE" in p1.stdout, p1.stderr[-2000:]
+
+    # phase 2: restore onto an 8-device mesh, sharded over 'data'
+    read = textwrap.dedent(
+        f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.dist.checkpoint import CheckpointManager
+        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        template = {{"w": jnp.zeros((8, 8)), "step": jnp.asarray(0)}}
+        shardings = {{"w": NamedSharding(mesh, P("data", None)),
+                      "step": NamedSharding(mesh, P())}}
+        restored, step = CheckpointManager(r"{tmp_path}").restore(template, shardings=shardings)
+        assert step == 3
+        w = restored["w"]
+        assert len(w.sharding.device_set) == 8, w.sharding
+        np.testing.assert_array_equal(np.asarray(w), np.arange(64.0).reshape(8, 8))
+        print("ELASTIC_OK")
+        """
+    )
+    p2 = subprocess.run([sys.executable, "-c", read], capture_output=True, text=True, timeout=300, env=env)
+    assert "ELASTIC_OK" in p2.stdout, p2.stdout + p2.stderr[-2000:]

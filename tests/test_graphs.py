@@ -1,0 +1,96 @@
+import numpy as np
+import pytest
+
+from repro.graphs import (
+    erdos_renyi,
+    expanded_partition,
+    from_edge_list,
+    newman_watts_strogatz,
+    partition_graph,
+    random_connected_query,
+    random_labels,
+    sample_fanout,
+)
+
+
+def test_from_edge_list_csr_valid():
+    g = from_edge_list(5, [(0, 1), (1, 2), (2, 0), (3, 4), (1, 1), (0, 1)], np.arange(5))
+    g.validate()
+    assert g.n_edges == 4  # self loop dropped, dup dropped
+    assert g.has_edge(0, 1) and g.has_edge(1, 0)
+    assert not g.has_edge(0, 3)
+
+
+def test_nws_generator_connected_and_labeled():
+    g = newman_watts_strogatz(200, k=4, p=0.1, n_labels=10, seed=3)
+    g.validate()
+    assert g.n_vertices == 200
+    assert g.labels.min() >= 0 and g.labels.max() < 10
+    assert g.avg_degree >= 2.0  # ring lattice base
+
+
+@pytest.mark.parametrize("dist", ["uniform", "gaussian", "zipf"])
+def test_label_distributions(dist):
+    lab = random_labels(5000, 50, dist, seed=0)
+    assert lab.shape == (5000,)
+    assert lab.min() >= 0 and lab.max() < 50
+    if dist == "zipf":
+        counts = np.bincount(lab, minlength=50)
+        assert counts[0] > counts[10]  # head-heavy
+
+
+def test_partitioner_balance_and_cut():
+    g = newman_watts_strogatz(400, k=4, p=0.05, n_labels=5, seed=0)
+    part = partition_graph(g, 4, seed=0)
+    sizes = part.sizes()
+    assert sizes.sum() == g.n_vertices
+    assert sizes.max() <= int(np.ceil(g.n_vertices / 4 * 1.05)) + 1
+    # locality-grown partitions must beat a random assignment's cut
+    rng = np.random.default_rng(0)
+    rand_assign = rng.integers(0, 4, g.n_vertices)
+    e = g.edge_array()
+    rand_cut = int(np.sum(rand_assign[e[:, 0]] != rand_assign[e[:, 1]]))
+    assert part.edge_cut(g) < rand_cut
+
+
+def test_expanded_partition_superset():
+    g = erdos_renyi(200, avg_degree=4, n_labels=5, seed=1)
+    part = partition_graph(g, 3, seed=0)
+    for j in range(3):
+        members = set(map(int, part.members(j)))
+        exp = set(map(int, expanded_partition(g, part, j, 2)))
+        assert members <= exp
+
+
+def test_sampler_shapes_and_validity():
+    g = erdos_renyi(300, avg_degree=8, n_labels=5, seed=2)
+    seeds = np.arange(16)
+    batch = sample_fanout(g, seeds, fanouts=(5, 3), seed=0)
+    assert len(batch.blocks) == 2
+    b0 = batch.blocks[0]
+    assert b0.nbr_index.shape == (16, 5)
+    # every masked-in index points into the next layer's vertex set,
+    # and resolves to a true neighbor
+    for i in range(16):
+        v = int(batch.vertex_ids[0][i])
+        nbrs = set(map(int, g.neighbors(v)))
+        for f in range(5):
+            if b0.mask[i, f]:
+                w = int(batch.vertex_ids[1][b0.nbr_index[i, f]])
+                assert w in nbrs
+
+
+def test_random_connected_query_is_connected():
+    g = newman_watts_strogatz(300, k=4, p=0.1, n_labels=8, seed=5)
+    q = random_connected_query(g, 6, seed=1)
+    assert q.n_vertices == 6
+    # BFS connectivity
+    seen = {0}
+    stack = [0]
+    while stack:
+        u = stack.pop()
+        for w in q.neighbors(u):
+            if int(w) not in seen:
+                seen.add(int(w))
+                stack.append(int(w))
+    assert len(seen) == 6

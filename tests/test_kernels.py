@@ -1,0 +1,147 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU).
+
+Per assignment: for each kernel, sweep shapes/dtypes and assert_allclose
+against the ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cross_interact.ops import cross_interact, cross_interact_ref
+from repro.kernels.dominance_scan.ops import dominance_scan, dominance_scan_ref
+from repro.kernels.flash_attention.ops import flash_attention, flash_attention_ref
+from repro.kernels.star_agg.ops import star_agg, star_agg_ref
+
+
+# ------------------------------------------------------- dominance scan ----
+
+
+@pytest.mark.parametrize("n,d", [(16, 6), (1000, 6), (4096, 18), (777, 12), (128, 128)])
+@pytest.mark.parametrize("block_n", [128, 1024])
+def test_dominance_scan_sweep(n, d, block_n):
+    rng = np.random.default_rng(n + d)
+    emb = rng.random((n, d)).astype(np.float32)
+    lab_ids = rng.integers(0, 5, n)
+    lab_vocab = rng.random((5, d)).astype(np.float32)
+    emb0 = lab_vocab[lab_ids]
+    # plant a guaranteed candidate: query = planted row's embedding exactly
+    j = int(rng.integers(0, n))
+    q = emb[j].copy()
+    q0 = emb0[j].copy()
+    out = dominance_scan(q, q0, emb, emb0, block_n=block_n)
+    ref = dominance_scan_ref(q, q0, emb, emb0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert 0 < int(ref.sum()) < n  # non-trivial: planted row kept, most pruned
+
+
+def test_dominance_scan_multi_gnn_concat():
+    """Concatenated multi-GNN embeddings ≡ AND of separate dominance checks."""
+    rng = np.random.default_rng(0)
+    n, d = 512, 4
+    e1, e2 = rng.random((2, n, d)).astype(np.float32)
+    q1, q2 = rng.random((2, d)).astype(np.float32) * 0.8
+    emb0 = np.zeros((n, 2 * d), np.float32)
+    cat = dominance_scan(np.concatenate([q1, q2]), emb0[0], np.concatenate([e1, e2], 1), emb0)
+    sep = dominance_scan_ref(jnp.asarray(q1), jnp.zeros(d), e1, np.zeros((n, d), np.float32))
+    sep &= dominance_scan_ref(jnp.asarray(q2), jnp.zeros(d), e2, np.zeros((n, d), np.float32))
+    np.testing.assert_array_equal(np.asarray(cat), np.asarray(sep))
+
+
+def test_dominance_scan_empty():
+    out = dominance_scan(
+        jnp.zeros(4), jnp.zeros(4), jnp.zeros((0, 4)), jnp.zeros((0, 4))
+    )
+    assert out.shape == (0,)
+
+
+# ------------------------------------------------------------ star agg -----
+
+
+@pytest.mark.parametrize("n,k,v,f", [(64, 4, 16, 8), (1000, 10, 64, 32), (333, 7, 128, 128)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_star_agg_sweep(n, k, v, f, dtype):
+    rng = np.random.default_rng(n * k)
+    idx = rng.integers(0, v, (n, k)).astype(np.int32)
+    mask = rng.random((n, k)) < 0.7
+    table = rng.normal(size=(v, f)).astype(dtype)
+    out = star_agg(idx, mask, table)
+    ref = star_agg_ref(idx, mask, table)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_star_agg_all_masked():
+    table = np.ones((4, 8), np.float32)
+    out = star_agg(np.zeros((16, 3), np.int32), np.zeros((16, 3), bool), table)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+# ------------------------------------------------------ flash attention ----
+
+
+@pytest.mark.parametrize("b,h,s,dh", [(1, 2, 128, 64), (2, 2, 256, 64), (1, 4, 512, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, h, s, dh, causal):
+    rng = np.random.default_rng(s)
+    q = rng.normal(size=(b, s, h, dh)).astype(np.float32)
+    k = rng.normal(size=(b, s, h, dh)).astype(np.float32)
+    v = rng.normal(size=(b, s, h, dh)).astype(np.float32)
+    out = flash_attention(q, k, v, causal=causal)
+    ref = flash_attention(q, k, v, causal=causal, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_gqa_and_window():
+    rng = np.random.default_rng(1)
+    b, s, hq, hkv, dh = 1, 256, 4, 2, 64
+    q = rng.normal(size=(b, s, hq, dh)).astype(np.float32)
+    k = rng.normal(size=(b, s, hkv, dh)).astype(np.float32)
+    v = rng.normal(size=(b, s, hkv, dh)).astype(np.float32)
+    out = flash_attention(q, k, v, causal=True, window=64)
+    ref = flash_attention(q, k, v, causal=True, window=64, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_matches_model_chunked_attention():
+    """Kernel == the model's pure-jnp chunked attention (the XLA fallback)."""
+    from repro.models.transformer import chunked_attention
+
+    rng = np.random.default_rng(2)
+    b, s, hkv, g, dh = 1, 128, 2, 2, 64
+    q = rng.normal(size=(b, s, hkv, g, dh)).astype(np.float32)
+    k = rng.normal(size=(b, s, hkv, dh)).astype(np.float32)
+    v = rng.normal(size=(b, s, hkv, dh)).astype(np.float32)
+    pos = jnp.arange(s)
+    model_out = chunked_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), pos, pos, None, 32)
+    kern_out = flash_attention(q.reshape(b, s, hkv * g, dh)[:, :, :, :], k, v, causal=True)
+    # model output is (B, S, H, dv) with grouped heads flattened in same order
+    np.testing.assert_allclose(
+        np.asarray(model_out), np.asarray(kern_out), rtol=2e-3, atol=2e-3
+    )
+
+
+# ------------------------------------------------------- cross interact ----
+
+
+@pytest.mark.parametrize("b,d", [(64, 32), (512, 429), (1000, 128)])
+def test_cross_interact_sweep(b, d):
+    rng = np.random.default_rng(b + d)
+    x0 = rng.normal(size=(b, d)).astype(np.float32)
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    w = (rng.normal(size=(d, d)) / np.sqrt(d)).astype(np.float32)
+    bias = rng.normal(size=(d,)).astype(np.float32)
+    out = cross_interact(x0, x, w, bias)
+    ref = cross_interact_ref(x0, x, w, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_cross_interact_matches_model_layer():
+    from repro.models.recsys import _cross_layer
+
+    rng = np.random.default_rng(3)
+    x0 = rng.normal(size=(32, 16)).astype(np.float32)
+    x = rng.normal(size=(32, 16)).astype(np.float32)
+    w = rng.normal(size=(16, 16)).astype(np.float32)
+    b = rng.normal(size=(16,)).astype(np.float32)
+    out = cross_interact(x0, x, w, b)
+    ref = _cross_layer(jnp.asarray(x0), jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,66 @@
+"""MoE EP parity: the shard_map expert-parallel block (psum combine,
+optional ZeRO-3 gathers) computes the same output + grads as the local
+single-device dispatch (8-device subprocess)."""
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.models.moe import MoEConfig, init_moe_params, moe_block
+
+    T, D = 64, 32
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(T, D)).astype(np.float32))
+
+    for fsdp in [False, True]:
+        mcfg = MoEConfig(n_experts=8, top_k=2, d_ff_expert=64, n_shared=1,
+                         capacity_factor=8.0, fsdp=fsdp)  # high cf: no drops
+        params = init_moe_params(jax.random.PRNGKey(1), D, mcfg)
+        # local reference (no mesh)
+        ref, aux_ref = moe_block(x, params, mcfg, mesh=None)
+        # distributed: 2-way data × 4-way model
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        wspec = P("model", "data", None) if fsdp else P("model")
+        shard_p = {"router": NamedSharding(mesh, P()),
+                   "w1": NamedSharding(mesh, wspec),
+                   "w3": NamedSharding(mesh, wspec),
+                   "w2": NamedSharding(mesh, wspec),
+                   "shared_w1": NamedSharding(mesh, P()),
+                   "shared_w3": NamedSharding(mesh, P()),
+                   "shared_w2": NamedSharding(mesh, P())}
+        xs = NamedSharding(mesh, P("data", None))
+        f = jax.jit(lambda p, x: moe_block(x, p, mcfg, mesh=mesh),
+                    in_shardings=(shard_p, xs))
+        out, aux = f(params, x)
+        # NOTE: capacity is per-shard in EP (T_loc) vs global locally; with
+        # cf=8 nothing drops either way → identical math expected
+        err = float(jnp.abs(out - ref).max())
+        print(f"fsdp={fsdp}: max err {err:.2e}, aux diff {abs(float(aux-aux_ref)):.2e}")
+        assert err < 2e-5
+        # gradient parity through the shard_map (psum transpose correctness)
+        g_ref = jax.grad(lambda p: jnp.sum(moe_block(x, p, mcfg, mesh=None)[0] ** 2))(params)
+        g_dist = jax.grad(lambda p: jnp.sum(moe_block(x, p, mcfg, mesh=mesh)[0] ** 2))(params)
+        md = max(float(jnp.abs(a - b).max()) for a, b in
+                 zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_dist)))
+        print(f"fsdp={fsdp}: max grad diff {md:.2e}")
+        assert md < 5e-4
+    print("MOE_EP_OK")
+    """
+)
+
+
+def test_moe_expert_parallel_matches_local():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert "MOE_EP_OK" in proc.stdout, proc.stdout + proc.stderr[-3000:]

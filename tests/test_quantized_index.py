@@ -1,0 +1,75 @@
+"""§Perf C1/C2 exactness: the int8 + label-hash pre-filter never changes
+results (conservative rounding ⇒ superset; exact predicates follow)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GnnPeConfig, GnnPeEngine, build_index, query_index, vf2_match
+from repro.core.index import hash_labels, quantize_data, quantize_query
+from repro.graphs import erdos_renyi, random_connected_query
+
+
+@given(st.integers(0, 10_000), st.integers(1, 24))
+@settings(max_examples=50, deadline=None)
+def test_quantization_is_conservative(seed, d):
+    """q ≤ e  ⇒  quantize_query(q) ≤ quantize_data(e)  (no false dismissal)."""
+    rng = np.random.default_rng(seed)
+    q = rng.random(d).astype(np.float32)
+    e = np.clip(q + rng.random(d).astype(np.float32) * rng.choice([0, 1e-7, 0.1], d), 0, 1)
+    assert np.all(q <= e)
+    assert np.all(quantize_query(q) <= quantize_data(e))
+
+
+def test_label_hash_equality():
+    labs = np.array([[1, 2, 3], [1, 2, 3], [3, 2, 1]], np.int32)
+    h = hash_labels(labs)
+    assert h[0] == h[1] and h[0] != h[2]
+
+
+def test_quantized_index_query_identical():
+    rng = np.random.default_rng(0)
+    P, D = 2000, 6
+    emb = rng.random((P, D)).astype(np.float32)
+    lab_ids = rng.integers(0, 4, (P, 3)).astype(np.int32)
+    lab_vocab = rng.random((4, 2)).astype(np.float32)
+    emb0 = lab_vocab[lab_ids].reshape(P, 6)
+    paths = rng.integers(0, 100, (P, 3)).astype(np.int32)
+    base = build_index(paths, emb, emb0, block_size=64)
+    quant = build_index(paths, emb, emb0, block_size=64, quantize=True, path_labels=lab_ids)
+    assert quant.emb_q is not None and quant.label_hash is not None
+    for t in range(20):
+        j = int(rng.integers(0, P))
+        # dominated query → non-trivial result sets
+        q_emb = (emb[j] * rng.uniform(0.7, 1.0)).astype(np.float32)
+        q_emb0 = emb0[j]
+        qh = int(hash_labels(lab_ids[j][None])[0])
+        r1 = np.sort(query_index(base, q_emb, q_emb0))
+        r2 = np.sort(query_index(quant, q_emb, q_emb0, q_label_hash=qh))
+        # NOTE: the sort order inside build differs only if quantize changed
+        # it — it doesn't (same sort keys); row ids comparable directly.
+        np.testing.assert_array_equal(r1, r2)
+
+
+def test_engine_quantized_still_exact():
+    g = erdos_renyi(150, avg_degree=3.5, n_labels=5, seed=3)
+    eng_q = GnnPeEngine(
+        GnnPeConfig(n_partitions=2, encoder="monotone", quantize_index=True)
+    ).build(g)
+    eng_b = GnnPeEngine(GnnPeConfig(n_partitions=2, encoder="monotone")).build(g)
+    for s in range(5):
+        q = random_connected_query(g, 5, seed=700 + s)
+        mq = set(eng_q.match(q))
+        assert mq == set(vf2_match(g, q))
+        assert mq == set(eng_b.match(q))
+
+
+def test_quantized_prefilter_shrinks_bytes():
+    """The sidecar is 26 B/path vs 96 B/path for the f32 leaf arrays
+    (n_multi=2, l=2, d=2) — the 3.7× traffic cut claimed in §Perf C."""
+    g = erdos_renyi(200, avg_degree=3.5, n_labels=5, seed=4)
+    eng = GnnPeEngine(
+        GnnPeConfig(n_partitions=1, encoder="monotone", n_multi=2, quantize_index=True)
+    ).build(g)
+    idx = eng.models[0].index
+    full = idx.emb.nbytes + idx.emb0.nbytes + idx.emb_multi.nbytes
+    side = idx.emb_q.nbytes + idx.label_hash.nbytes
+    assert side * 3 < full
