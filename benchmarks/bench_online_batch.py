@@ -1,0 +1,93 @@
+"""§Perf D: batched fused online path vs the seed scalar path.
+
+Measures, on the same engine/graph/queries:
+
+  * scalar  — per-query ``match(impl="scalar")``: per-(partition, path)
+    Python probe loop, NumPy leaf scan, per-row refine (the seed path);
+  * batched — ``match_many`` on a 16-query batch: shared star embedding,
+    one ``query_index_batch`` per partition, one fused Pallas
+    ``dominance_scan`` leaf scan per partition, vectorized refine;
+  * batched single-query latency — ``match_many([q])``.
+
+Match sets are asserted byte-identical per query.  Emits the standard
+CSV rows, plus a JSON artifact (``--json PATH`` or ``BENCH_JSON`` env)
+so CI can track the speedup trajectory PR over PR.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import build_engine, emit, make_graph, sample_queries
+
+BATCH = 16
+
+
+def _time_best(fn, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(full: bool = False, json_path: str | None = None) -> dict:
+    # paper-posture partition counts (≈80 partitions, cf. GNN-PE's 500K
+    # vertices / ~8K per partition): the online filter stage dominates,
+    # which is exactly the stage this benchmark compares
+    n = 50_000 if full else 20_000
+    g = make_graph(n=n, seed=11)
+    eng = build_engine(g, partition_size=625 if full else 250)
+    queries = sample_queries(g, n=BATCH, seed0=42)
+
+    # warm up both paths (jit/pallas compile out of the timed region)
+    batched_all = eng.match_many(queries)
+    scalar_all = [eng.match(q, impl="scalar") for q in queries]
+    for qi, (a, b) in enumerate(zip(batched_all, scalar_all)):
+        assert a == b, f"query {qi}: batched/scalar match sets differ"
+
+    t_scalar = _time_best(lambda: [eng.match(q, impl="scalar") for q in queries])
+    t_batched = _time_best(lambda: eng.match_many(queries))
+    t_single = _time_best(lambda: eng.match_many([queries[0]]))
+    t_single_scalar = _time_best(lambda: eng.match(queries[0], impl="scalar"))
+
+    speedup = t_scalar / max(t_batched, 1e-12)
+    nq = len(queries)
+    emit("online_batch/scalar_total", 1e6 * t_scalar, f"n_queries={nq}")
+    emit("online_batch/batched_total", 1e6 * t_batched, f"speedup={speedup:.2f}x")
+    emit("online_batch/scalar_per_query", 1e6 * t_scalar / nq, "")
+    emit("online_batch/batched_per_query", 1e6 * t_batched / nq, "")
+    emit("online_batch/single_latency_batched", 1e6 * t_single, "")
+    emit("online_batch/single_latency_scalar", 1e6 * t_single_scalar, "")
+
+    rec = {
+        "n_vertices": int(g.n_vertices),
+        "n_queries": nq,
+        "scalar_total_s": t_scalar,
+        "batched_total_s": t_batched,
+        "single_latency_batched_s": t_single,
+        "single_latency_scalar_s": t_single_scalar,
+        "speedup": speedup,
+        "match_sets_identical": True,
+    }
+    json_path = json_path or os.environ.get("BENCH_JSON")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    rec = run(full=args.full, json_path=args.json)
+    print(f"# batched speedup over scalar: {rec['speedup']:.2f}x")

@@ -19,6 +19,7 @@ def main() -> None:
     from . import (
         bench_graph_scaling,
         bench_offline,
+        bench_online_batch,
         bench_params,
         bench_pruning,
         bench_query_scaling,
@@ -26,6 +27,7 @@ def main() -> None:
     )
 
     benches = [
+        ("online_batch", bench_online_batch.run),
         ("fig8_pruning", bench_pruning.run),
         ("fig9_baselines", bench_vs_baselines.run),
         ("fig7_params", bench_params.run),

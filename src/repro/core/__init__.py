@@ -1,7 +1,13 @@
 from .baselines import gql_match, match_count, quicksi_match, vf2_match
 from .encoder import EncoderConfig, GATEncoder, MonotoneEncoder, make_encoder
 from .engine import GnnPeConfig, GnnPeEngine, PartitionModel, QueryStats
-from .index import PackedIndex, build_index, query_index
+from .index import (
+    PackedIndex,
+    build_index,
+    query_index,
+    query_index_batch,
+    query_index_batch_multi,
+)
 from .matcher import join_candidates, match_from_candidates, refine
 from .paths import concat_path_embeddings, enumerate_paths
 from .planner import QueryPlan, plan_query
@@ -24,6 +30,8 @@ __all__ = [
     "PackedIndex",
     "build_index",
     "query_index",
+    "query_index_batch",
+    "query_index_batch_multi",
     "QueryPlan",
     "plan_query",
     "enumerate_paths",

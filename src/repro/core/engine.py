@@ -6,6 +6,23 @@ packed block indexes.
 
 Online:   cost-model query plan → per-partition query embeddings →
 index retrieval (Lemmas 4.1–4.4) → multi-way join → exact refinement.
+
+Batched hot path (§Perf D — default, ``online_impl="batched"``):
+``match_many`` drives a whole batch of queries through ONE fused pass
+per stage instead of Python loops over (query × partition × path):
+
+  1. star tensors of every query concatenate into one batch, so each
+     partition's GNNs embed all queries' vertices in one call;
+  2. every (query, plan-path) probe against a partition — including the
+     ``plan_weight="dr"`` cost-model probes, which are memoized and
+     reused by retrieval — stacks into one ``query_index_batch`` call:
+     level-synchronous MBR masks evaluated as one compare-reduce per
+     level, then one Pallas ``dominance_scan`` leaf scan for the batch;
+  3. join + vectorized refine (see matcher.py) per query.
+
+``online_impl="scalar"`` keeps the original per-(partition, path) loop
+as the exactness cross-check and the benchmark baseline
+(benchmarks/bench_online_batch.py measures one against the other).
 """
 from __future__ import annotations
 
@@ -13,14 +30,21 @@ import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..graphs import Graph, Partitioning, expanded_partition, partition_graph
 from .encoder import EncoderConfig, make_encoder
-from .index import PackedIndex, build_index, query_index
+from .index import (
+    PackedIndex,
+    build_index,
+    hash_labels,
+    query_index,
+    query_index_batch_multi,
+)
 from .matcher import match_from_candidates
 from .paths import concat_path_embeddings, enumerate_paths
-from .planner import QueryPlan, plan_query
+from .planner import QueryPlan, candidate_plan_paths, plan_query
 from .stars import build_pair_dataset, build_star_tensors
 from .training import TrainConfig, train_dominance
 
@@ -44,6 +68,12 @@ class GnnPeConfig:
     plan_weight: str = "deg"
     induced: bool = False
     quantize_index: bool = False  # §Perf C1/C2: int8 + label-hash leaf sidecar
+    online_impl: str = "batched"  # "batched" (§Perf D) | "scalar" (baseline)
+    # fused leaf scan backend: None = auto (Pallas kernel on TPU, the
+    # bit-equal vectorized NumPy reference on CPU — interpret-mode Pallas
+    # is an emulation, ~25× slower than XLA on the same work);
+    # True forces the kernel (integration tests), False forces NumPy.
+    use_pallas_scan: bool | None = None
     seed: int = 0
     train: TrainConfig = dataclasses.field(default_factory=TrainConfig)
 
@@ -85,6 +115,16 @@ class GnnPeEngine:
         self.models: list[PartitionModel] = []
         self.n_labels: int = 0
         self.offline_stats: dict = {}
+        self._encoder = None  # built once per (config, n_labels); see encoder
+        self._stacked_cache = None  # per-partition params stacked for vmap
+
+    @property
+    def encoder(self):
+        """The shared encoder instance (constructed once, reused by every
+        offline/online embedding call — not per partition per query)."""
+        if self._encoder is None:
+            self._encoder = make_encoder(self._encoder_cfg())
+        return self._encoder
 
     # ------------------------------------------------------------------
     # Offline pre-computation (Alg. 1 lines 1-5)
@@ -94,6 +134,8 @@ class GnnPeEngine:
         t0 = time.perf_counter()
         self.graph = g
         self.n_labels = int(g.labels.max()) + 1 if g.n_vertices else 1
+        self._encoder = None  # n_labels may have changed
+        self._stacked_cache = None
         self.partitioning = partition_graph(g, cfg.n_partitions, seed=cfg.seed)
         rng = np.random.default_rng(cfg.seed)
         # randomized label maps shared across partitions (query side needs them)
@@ -208,7 +250,7 @@ class GnnPeEngine:
     def _node_embeddings(self, g, vset, stars, params, fallback_vertices):
         """Embed every vertex of the expanded set; all-ones for overflow/fallback."""
         cfg = self.cfg
-        enc = make_encoder(self._encoder_cfg())
+        enc = self.encoder
         o = np.asarray(
             enc.embed_stars(
                 params,
@@ -237,7 +279,7 @@ class GnnPeEngine:
         """Embed query stars with partition j's GNNs (query-side safety:
         overflow query vertices embed to 0⃗ so they prune nothing)."""
         cfg = self.cfg
-        enc = make_encoder(self._encoder_cfg())
+        enc = self.encoder
         stars = build_star_tensors(q, np.arange(q.n_vertices), cfg.theta)
         o = np.asarray(
             enc.embed_stars(
@@ -264,8 +306,25 @@ class GnnPeEngine:
             o_multi[i] = oi
         return o, o0, o_multi
 
-    def match(self, q: Graph, return_stats: bool = False):
-        """Exact subgraph matching of query q (Alg. 3)."""
+    def match(self, q: Graph, return_stats: bool = False, impl: str | None = None):
+        """Exact subgraph matching of query q (Alg. 3).
+
+        ``impl`` overrides ``cfg.online_impl``: "batched" routes through
+        ``match_many`` (the fused hot path); "scalar" runs the original
+        per-(partition, path) loop (cross-check / benchmark baseline).
+        """
+        impl = impl or self.cfg.online_impl
+        if impl == "batched":
+            out = self.match_many([q], return_stats=return_stats)
+            if return_stats:
+                matches, stats = out
+                return matches[0], stats[0]
+            return out[0]
+        if impl != "scalar":
+            raise ValueError(f"unknown online impl {impl!r}; use 'batched' or 'scalar'")
+        return self._match_scalar(q, return_stats=return_stats)
+
+    def _match_scalar(self, q: Graph, return_stats: bool = False):
         assert self.graph is not None, "call build() first"
         cfg = self.cfg
         stats = QueryStats()
@@ -351,3 +410,223 @@ class GnnPeEngine:
         if return_stats:
             return matches, stats
         return matches
+
+    # ------------------------------------------------------------------
+    # Batched online matching (§Perf D): the fused multi-query hot path
+    # ------------------------------------------------------------------
+    def _stacked_model_params(self):
+        """Per-partition GNN params stacked on a leading partition dim so
+        one vmapped call embeds a star batch under EVERY partition's
+        model at once (m × fewer jit dispatches on the query path)."""
+        if self._stacked_cache is None:
+            main = jax.tree.map(lambda *xs: jnp.stack(xs), *[m.params for m in self.models])
+            multi = [
+                jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *[m.multi_params[i] for m in self.models]
+                )
+                for i in range(self.cfg.n_multi)
+            ]
+            self._stacked_cache = (main, multi)
+        return self._stacked_cache
+
+    def _query_node_embeddings_many(self, queries: list):
+        """Embed ALL queries' stars with every partition's GNNs.
+
+        Star tensors concatenate across queries AND the partition models
+        stack for ``jax.vmap``, so the whole (query batch × partition)
+        embedding grid is 2 + n_multi dispatches total (instead of
+        Q × m × (2+n)).  Returns ``(cat, spans)``: ``cat[mi] = (o, o0,
+        o_multi)`` concatenated over queries, with query ``qi``'s rows at
+        ``spans[qi]:spans[qi+1]`` — row-identical to
+        ``_query_node_embeddings``.
+        """
+        cfg = self.cfg
+        enc = self.encoder
+        star_list = [build_star_tensors(q, np.arange(q.n_vertices), cfg.theta) for q in queries]
+        sizes = [q.n_vertices for q in queries]
+        spans = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+        centers = np.concatenate([s.center_labels for s in star_list])
+        leaf_labels = np.concatenate([s.leaf_labels for s in star_list])
+        leaf_mask = np.concatenate([s.leaf_mask for s in star_list])
+        overflow = np.concatenate([s.overflow for s in star_list])
+        if not self.models:
+            return [], spans
+        main, multi = self._stacked_model_params()
+        o_all = np.asarray(
+            jax.vmap(lambda p: enc.embed_stars(p, centers, leaf_labels, leaf_mask))(main)
+        ).astype(np.float32)  # (m, n, d)
+        o0_all = np.asarray(
+            jax.vmap(lambda p: enc.embed_isolated(p, centers))(main)
+        ).astype(np.float32)
+        o_all[:, overflow] = 0.0
+        om_all = np.zeros((cfg.n_multi, len(self.models), centers.shape[0], cfg.emb_dim), np.float32)
+        for i in range(cfg.n_multi):
+            relab_c = self.label_perms[i][centers].astype(np.int32)
+            relab_l = self._relabel_leaves(leaf_labels, leaf_mask, i)
+            oi = np.asarray(
+                jax.vmap(lambda p: enc.embed_stars(p, relab_c, relab_l, leaf_mask))(multi[i])
+            ).astype(np.float32)
+            oi[:, overflow] = 0.0
+            om_all[i] = oi
+        cat = [
+            (o_all[mi], o0_all[mi], om_all[:, mi]) for mi in range(len(self.models))
+        ]
+        return cat, spans
+
+    def _probe_batch(self, requests: list, queries: list, q_embs, memo: dict) -> None:
+        """One fused index probe for many (query, path) pairs × partitions.
+
+        ``requests`` is a list of (qi, path) pairs; results land in
+        ``memo[(mi, qi, path)]`` — the same rows separate ``query_index``
+        calls would produce, from ONE ``query_index_batch_multi`` (and
+        hence one Pallas leaf scan) covering every partition.  Probe
+        embeddings assemble as a single gather over the concatenated
+        query-star embeddings (no per-request Python loop).
+        """
+        cfg = self.cfg
+        cat, spans = q_embs
+        reqs = list(dict.fromkeys(requests))
+        # group once per path length; partitions share the probe layout
+        by_len: dict = {}
+        for qi, p in reqs:
+            by_len.setdefault(len(p), []).append((qi, p))
+        layouts = {}
+        all_labels = None
+        for L, sel in by_len.items():
+            qi_arr = np.asarray([qi for qi, _ in sel], dtype=np.int64)
+            pv_arr = np.asarray([p for _, p in sel], dtype=np.int64)  # (B, L)
+            gidx = spans[qi_arr][:, None] + pv_arr  # rows in the concat stars
+            qh = None
+            if cfg.quantize_index:
+                if all_labels is None:
+                    all_labels = np.concatenate([q.labels for q in queries])
+                qh = hash_labels(all_labels[gidx])
+            layouts[L] = (sel, gidx, qh)
+        items = []
+        sels = []
+        for mi, model in enumerate(self.models):
+            if model.index.n_paths == 0:
+                continue
+            L = model.index.paths.shape[1]
+            if L not in layouts:
+                continue
+            sel, gidx, qh = layouts[L]
+            B = len(sel)
+            o, o0, om = cat[mi]
+            q_emb = o[gidx].reshape(B, -1)
+            q_emb0 = o0[gidx].reshape(B, -1)
+            q_multi = om[:, gidx].reshape(cfg.n_multi, B, -1) if cfg.n_multi else None
+            items.append((model.index, q_emb, q_emb0, q_multi, qh))
+            sels.append((mi, sel))
+        if not items:
+            return
+        # one fused traversal + ONE fused leaf scan for every partition
+        use_pallas = (
+            cfg.use_pallas_scan
+            if cfg.use_pallas_scan is not None
+            else jax.default_backend() == "tpu"
+        )
+        results = query_index_batch_multi(items, use_pallas=use_pallas)
+        for (mi, sel), rows_list in zip(sels, results):
+            for b, (qi, p) in enumerate(sel):
+                memo[(mi, qi, p)] = rows_list[b]
+
+    def match_many(self, queries: list, return_stats: bool = False):
+        """Exact subgraph matching for a batch of queries (fused Alg. 3).
+
+        Per-query results are identical to ``match(q, impl="scalar")``;
+        the filter stage runs as one fused pass per partition for the
+        whole batch (shared star embedding, batched traversal, one
+        Pallas leaf scan).  ``plan_weight="dr"`` cost-model probes join
+        the same batch and are reused by retrieval.
+        """
+        assert self.graph is not None, "call build() first"
+        cfg = self.cfg
+        nq = len(queries)
+        if nq == 0:
+            return ([], []) if return_stats else []
+        stats = [QueryStats() for _ in range(nq)]
+        t0 = time.perf_counter()
+        q_embs = self._query_node_embeddings_many(queries)
+        memo: dict = {}
+        n_models = len(self.models)
+        # ---- plans (dr probes ride the same batched pipeline) -----------
+        weight_fns: list = [None] * nq
+        if cfg.plan_weight == "dr":
+            probe_reqs = [
+                (qi, p)
+                for qi, q in enumerate(queries)
+                for p in candidate_plan_paths(q, cfg.path_length)
+            ]
+            self._probe_batch(probe_reqs, queries, q_embs, memo)
+
+            def make_weight_fn(qi):
+                def weight_fn(p):
+                    return float(
+                        sum(
+                            memo[(mi, qi, p)].size
+                            for mi in range(n_models)
+                            if (mi, qi, p) in memo
+                        )
+                    )
+
+                return weight_fn
+
+            weight_fns = [make_weight_fn(qi) for qi in range(nq)]
+        plans = [
+            plan_query(
+                q, cfg.path_length,
+                strategy=cfg.plan_strategy, weight=cfg.plan_weight,
+                weight_fn=weight_fns[qi], seed=cfg.seed,
+            )
+            for qi, q in enumerate(queries)
+        ]
+        # ---- retrieval: one fused probe per partition for all plans -----
+        todo = [
+            (qi, p)
+            for qi, plan in enumerate(plans)
+            for p in plan.paths
+            if not any((mi, qi, p) in memo for mi in range(n_models))
+        ]
+        if todo:
+            self._probe_batch(todo, queries, q_embs, memo)
+        filter_time = time.perf_counter() - t0
+        # ---- per-query candidate assembly + join + refine ---------------
+        results = []
+        for qi, (q, plan) in enumerate(zip(queries, plans)):
+            st = stats[qi]
+            st.plan = plan
+            candidates = [[] for _ in plan.paths]
+            total_paths = 0
+            for mi, model in enumerate(self.models):
+                if model.index.n_paths == 0:
+                    continue
+                total_paths += model.index.n_paths
+                for pi, p in enumerate(plan.paths):
+                    rows = memo.get((mi, qi, p))
+                    if rows is not None and rows.size:
+                        candidates[pi].append(model.index.paths[rows])
+            cand_arrays = []
+            cand_total = 0
+            for pi, parts in enumerate(candidates):
+                if parts:
+                    arr = np.concatenate(parts, axis=0)
+                else:
+                    arr = np.zeros((0, len(plan.paths[pi])), np.int32)
+                cand_arrays.append(arr)
+                cand_total += arr.shape[0]
+                st.n_candidates[plan.paths[pi]] = int(arr.shape[0])
+            st.filter_time = filter_time / nq  # batch stage, amortized
+            st.total_paths = total_paths * max(len(plan.paths), 1)
+            st.candidate_paths = cand_total
+            st.pruning_power = 1.0 - cand_total / max(st.total_paths, 1)
+            t1 = time.perf_counter()
+            matches = match_from_candidates(
+                self.graph, q, plan.paths, cand_arrays, induced=cfg.induced
+            )
+            st.join_time = time.perf_counter() - t1
+            st.n_matches = len(matches)
+            results.append(matches)
+        if return_stats:
+            return results, stats
+        return results

@@ -18,6 +18,22 @@ and replace the *control structure*:
     per-block key cutoff predicate evaluated in the same pass.
 
 Aggregates (MBR', MBR₀) are exactly the aR-tree "aggregate data" of §4.2.
+
+Batched hot path (§Perf D — this PR):  ``query_index_batch`` runs the
+whole online filter for a *batch* of Q query paths at once:
+
+  1. level-synchronous masks — ONE (Q, blocks, D) compare-reduce per
+     level for every query simultaneously, descending through the union
+     of surviving blocks while tracking per-query survival;
+  2. a fused work-proportional leaf scan — the (query, row) pairs from
+     each query's OWN surviving blocks pack into row-aligned arrays and
+     one Pallas ``dominance_scan_pairs`` call (label + dominance +
+     multi-GNN checks concatenated along features) decides every pair;
+     the pure-NumPy reference stays behind ``use_pallas=False`` and is
+     bit-equal (tests/test_batched_online.py).
+
+The scalar ``query_index`` is retained unchanged as the exactness
+cross-check and benchmark baseline.
 """
 from __future__ import annotations
 
@@ -25,17 +41,42 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["PackedIndex", "build_index", "query_index", "leaf_scan"]
+__all__ = [
+    "PackedIndex",
+    "build_index",
+    "query_index",
+    "query_index_batch",
+    "query_index_batch_multi",
+    "leaf_scan",
+    "leaf_scan_batch",
+]
+
+# incremented on every fused Pallas leaf scan — lets integration tests prove
+# the kernel runs on the engine's real query path (not just in kernel tests)
+PALLAS_SCAN_CALLS = 0
 
 
 def _morton_key(x: np.ndarray, bits: int = 8) -> np.ndarray:
-    """Interleaved-bit (Morton) key over quantized embedding coords."""
+    """Interleaved-bit (Morton) key over quantized embedding coords.
+
+    Vectorized bit-interleave: for each of ``bits`` rounds (most-
+    significant first) pack one bit from every dim into a d-wide chunk
+    and shift it in — identical (mod 2⁶⁴) to the scalar bits×dims loop.
+    """
     q = np.clip((x * (1 << bits)).astype(np.uint64), 0, (1 << bits) - 1)
     n, d = q.shape
     key = np.zeros(n, dtype=np.uint64)
+    if d == 0 or n == 0:
+        return key
+    if d >= 64:  # chunk shift would overflow; keep the scalar fallback
+        for b in range(bits - 1, -1, -1):
+            for t in range(d):
+                key = (key << np.uint64(1)) | ((q[:, t] >> np.uint64(b)) & np.uint64(1))
+        return key
+    place = (np.uint64(d - 1) - np.arange(d, dtype=np.uint64))[None, :]
     for b in range(bits - 1, -1, -1):
-        for t in range(d):
-            key = (key << np.uint64(1)) | ((q[:, t] >> np.uint64(b)) & np.uint64(1))
+        chunk = ((q >> np.uint64(b)) & np.uint64(1)) << place
+        key = (key << np.uint64(d)) | chunk.sum(axis=1, dtype=np.uint64)
     return key
 
 
@@ -90,6 +131,11 @@ class PackedIndex:
         total = self.paths.nbytes + self.emb.nbytes + self.emb0.nbytes + self.emb_multi.nbytes
         for lv in self.levels:
             total += lv["mbr"].nbytes + lv["mbr0"].nbytes + lv["mbr_multi"].nbytes
+        # quantized sidecars are real index bytes too (offline_stats parity)
+        if self.emb_q is not None:
+            total += self.emb_q.nbytes
+        if self.label_hash is not None:
+            total += self.label_hash.nbytes
         return total
 
 
@@ -278,3 +324,308 @@ def query_index(
         }
         return rows, stats
     return rows
+
+
+# --------------------------------------------------------------------------
+# Batched query path (§Perf D): Q query paths per traversal, fused leaf scan
+# --------------------------------------------------------------------------
+
+
+def _block_mask_batch(mbr, mbr0, mbr_multi, q_emb, q_emb0, q_multi, eps: float):
+    """(Q, C) survival mask over C blocks for Q queries — one compare-reduce.
+
+    Same Lemma 4.3/4.4 predicates as ``_block_mask``, broadcast over the
+    query axis instead of looped over queries.
+    """
+    m = np.all(
+        (q_emb0[:, None, :] >= mbr0[None, :, :, 0] - eps)
+        & (q_emb0[:, None, :] <= mbr0[None, :, :, 1] + eps),
+        axis=2,
+    )
+    m &= np.all(q_emb[:, None, :] <= mbr[None, :, :, 1] + eps, axis=2)
+    for i in range(q_multi.shape[0]):
+        m &= np.all(q_multi[i][:, None, :] <= mbr_multi[i][None, :, :, 1] + eps, axis=2)
+    return m
+
+
+def _descend_batch(index: PackedIndex, q_emb, q_emb0, q_multi, eps: float):
+    """Level-synchronous descent for a query batch → (cand, alive).
+
+    ``cand`` is the union of leaf blocks surviving for ANY query;
+    ``alive[(qi, ci)]`` says whether leaf block ``cand[ci]`` survives for
+    query ``qi`` — each level is ONE (Q, blocks, D) compare-reduce.
+    """
+    Q = q_emb.shape[0]
+    cand = None
+    alive = None
+    for li in range(len(index.levels) - 1, -1, -1):
+        level = index.levels[li]
+        nb = level["mbr"].shape[0]
+        if cand is None:
+            cand = np.arange(nb)
+            alive = np.ones((Q, nb), bool)
+        else:
+            fo = index.fanout
+            children = (cand[:, None] * fo + np.arange(fo)[None, :]).reshape(-1)
+            alive = np.repeat(alive, fo, axis=1)
+            valid = children < nb
+            cand = children[valid]
+            alive = alive[:, valid]
+        if cand.size == 0:
+            break
+        alive &= _block_mask_batch(
+            level["mbr"][cand],
+            level["mbr0"][cand],
+            level["mbr_multi"][:, cand],
+            q_emb,
+            q_emb0,
+            q_multi,
+            eps,
+        )
+        keep_cols = alive.any(axis=0)
+        cand = cand[keep_cols]
+        alive = alive[:, keep_cols]
+    if cand is None:
+        cand = np.zeros((0,), np.int64)
+        alive = np.zeros((Q, 0), bool)
+    return cand, alive
+
+
+def _pack_leaf_pairs(
+    index: PackedIndex,
+    cand: np.ndarray,
+    alive: np.ndarray,
+    q_emb,
+    q_multi,
+    q_label_hash,
+):
+    """(query, block) survivors → packed (rows, q_ids) leaf pairs.
+
+    Applies the §Perf C1/C2 int8 + label-hash pre-filter when the index
+    carries the sidecar.  ``q_ids`` is qi-major (sorted), so per-query
+    splits downstream are one bincount + split.
+    """
+    bs = index.block_size
+    qi_pair, ci_pair = np.nonzero(alive)  # qi-major order
+    if qi_pair.size == 0:
+        return np.zeros((0,), np.int64), np.zeros((0,), np.int64)
+    row_mat = cand[ci_pair][:, None] * bs + np.arange(bs)[None, :]
+    valid = row_mat < index.n_paths
+    rows = row_mat[valid]
+    q_ids = np.repeat(qi_pair, bs).reshape(-1, bs)[valid]
+    if index.emb_q is not None:
+        n_gnn = q_multi.shape[0]
+        qcat = np.concatenate([q_emb] + [q_multi[i] for i in range(n_gnn)], axis=1)
+        qq = quantize_query(qcat)
+        pre = np.all(qq[q_ids] <= index.emb_q[rows], axis=1)
+        if index.label_hash is not None and q_label_hash is not None:
+            pre &= index.label_hash[rows] == np.asarray(q_label_hash)[q_ids]
+        rows = rows[pre]
+        q_ids = q_ids[pre]
+    return rows.astype(np.int64), q_ids.astype(np.int64)
+
+
+def _gather_pair_operands(index: PackedIndex, rows, q_ids, q_emb, q_emb0, q_multi):
+    """Row-aligned kernel operands for packed (query, row) pairs."""
+    n_gnn = q_multi.shape[0]
+    e_cat = (
+        np.concatenate([index.emb[rows]] + [index.emb_multi[i][rows] for i in range(n_gnn)], axis=1)
+        if n_gnn
+        else index.emb[rows]
+    )
+    q_cat = (
+        np.concatenate([q_emb] + [q_multi[i] for i in range(n_gnn)], axis=1)
+        if n_gnn
+        else q_emb
+    )
+    return q_cat[q_ids], q_emb0[q_ids], e_cat, index.emb0[rows]
+
+
+def _pairs_keep_mask(qg, q0g, eg, e0g, eps: float, use_pallas: bool) -> np.ndarray:
+    """Fused Lemma 4.1 + 4.2 verdict for row-aligned pairs."""
+    if qg.shape[0] == 0:
+        return np.zeros((0,), bool)
+    if use_pallas:
+        from ..kernels.dominance_scan.ops import dominance_scan_pairs
+
+        global PALLAS_SCAN_CALLS
+        PALLAS_SCAN_CALLS += 1
+        return np.asarray(dominance_scan_pairs(qg, q0g, eg, e0g, eps=eps)).astype(bool)
+    # NumPy reference (bit-equal): one row-aligned compare-reduce
+    keep = np.all(qg <= eg + eps, axis=1)
+    keep &= np.all(np.abs(e0g - q0g) <= eps, axis=1)
+    return keep
+
+
+def _pairs_keep_mask_numpy_lazy(index, rows, q_ids, q_emb, q_emb0, q_multi, eps):
+    """NumPy pair verdict with label short-circuit (same result as the
+    fused kernel): Lemma 4.1 equality first over the cheap (T, d) label
+    columns — only its (rare) survivors pay the wider dominance gather.
+    """
+    lab = np.all(np.abs(index.emb0[rows] - q_emb0[q_ids]) <= eps, axis=1)
+    sub = np.nonzero(lab)[0]
+    if sub.size == 0:
+        return lab
+    r = rows[sub]
+    qsub = q_ids[sub]
+    n_gnn = q_multi.shape[0]
+    dom = np.all(q_emb[qsub] <= index.emb[r] + eps, axis=1)
+    for i in range(n_gnn):
+        dom &= np.all(q_multi[i][qsub] <= index.emb_multi[i][r] + eps, axis=1)
+    keep = lab
+    keep[sub] = dom
+    return keep
+
+
+def _split_rows(rows, q_ids, keep, Q: int) -> list:
+    rows = rows[keep]
+    counts = np.bincount(q_ids[keep], minlength=Q)
+    return np.split(rows.astype(np.int64), np.cumsum(counts)[:-1])
+
+
+def leaf_scan_batch(
+    index: PackedIndex,
+    block_ids: np.ndarray,  # (C,) union of candidate leaf blocks
+    alive: np.ndarray,  # (Q, C) per-query block survival
+    q_emb: np.ndarray,  # (Q, D)
+    q_emb0: np.ndarray,  # (Q, D)
+    q_multi: np.ndarray,  # (n, Q, D)
+    eps: float,
+    q_label_hash: np.ndarray | None = None,  # (Q,) int64
+    use_pallas: bool = True,
+) -> list:
+    """Fused Lemmas 4.1 + 4.2 for a query batch — work-proportional.
+
+    Each query contributes only the leaf rows of its OWN surviving
+    blocks (a dense query×union scan would do Q×N work while per-query
+    pruning leaves ≪ N rows alive).  The (query, row) pairs pack into
+    row-aligned arrays and ONE Pallas ``dominance_scan_pairs`` call
+    checks label + dominance + multi-GNN (features concatenated) for
+    every pair: T = Σ_q rows_q — exactly the rows Q separate traversals
+    would touch, in one streaming pass.  ``use_pallas=False`` runs the
+    bit-equal NumPy reference.
+    """
+    Q = q_emb.shape[0]
+    if index.n_paths == 0 or block_ids.size == 0 or Q == 0:
+        return [np.zeros((0,), np.int64) for _ in range(Q)]
+    rows, q_ids = _pack_leaf_pairs(index, block_ids, alive, q_emb, q_multi, q_label_hash)
+    qg, q0g, eg, e0g = _gather_pair_operands(index, rows, q_ids, q_emb, q_emb0, q_multi)
+    keep = _pairs_keep_mask(qg, q0g, eg, e0g, eps, use_pallas)
+    return _split_rows(rows, q_ids, keep, Q)
+
+
+def query_index_batch(
+    index: PackedIndex,
+    q_emb: np.ndarray,  # (Q, D)
+    q_emb0: np.ndarray,  # (Q, D)
+    q_multi: np.ndarray | None = None,  # (n, Q, D)
+    eps: float = 1e-6,
+    return_stats: bool = False,
+    q_label_hash: np.ndarray | None = None,  # (Q,) int64
+    use_pallas: bool = True,
+):
+    """Alg. 3 traversal for a BATCH of query paths — one pass per level.
+
+    Level-synchronous over the union frontier: at each level the blocks
+    surviving for any query are expanded once, and a single (Q, blocks)
+    compare-reduce updates every query's survival mask.  The leaf scan is
+    one fused kernel call (see ``leaf_scan_batch``).  Per-query results
+    are identical to Q separate ``query_index`` calls.
+
+    Returns a list of Q int64 row arrays (and per-query stats dicts when
+    ``return_stats``).
+    """
+    out = query_index_batch_multi(
+        [(index, q_emb, q_emb0, q_multi, q_label_hash)],
+        eps=eps,
+        return_stats=return_stats,
+        use_pallas=use_pallas,
+    )
+    if return_stats:
+        return out[0][0], out[1][0]
+    return out[0]
+
+
+def query_index_batch_multi(
+    items: list,
+    eps: float = 1e-6,
+    return_stats: bool = False,
+    use_pallas: bool = True,
+):
+    """Batched traversal over SEVERAL indexes (partitions) at once.
+
+    ``items``: list of ``(index, q_emb, q_emb0, q_multi, q_label_hash)``
+    — one entry per partition, each with its own (Q_i, D) query batch.
+    The per-partition descents run level-synchronously; the packed leaf
+    pairs of ALL partitions concatenate into ONE fused Pallas
+    ``dominance_scan_pairs`` call (partitions share D, so their pair
+    rows stack), amortizing the kernel dispatch across the entire
+    multi-partition probe.  Returns a list (per item) of lists (per
+    query) of row arrays; with ``return_stats``, also per-item per-query
+    stats dicts.
+    """
+    packs = []
+    for index, q_emb, q_emb0, q_multi, q_label_hash in items:
+        q_emb = np.asarray(q_emb, np.float32)
+        q_emb0 = np.asarray(q_emb0, np.float32)
+        Q = q_emb.shape[0]
+        if q_multi is None:
+            q_multi = np.zeros((index.emb_multi.shape[0], Q, q_emb.shape[1]), np.float32)
+        if index.n_paths == 0 or Q == 0:
+            packs.append({"Q": Q, "empty": True})
+            continue
+        cand, alive = _descend_batch(index, q_emb, q_emb0, q_multi, eps)
+        rows, q_ids = _pack_leaf_pairs(index, cand, alive, q_emb, q_multi, q_label_hash)
+        pack = {
+            "Q": Q, "empty": False, "alive": alive, "rows": rows, "q_ids": q_ids,
+            "bs": index.block_size,
+        }
+        if use_pallas:
+            pack["ops"] = _gather_pair_operands(index, rows, q_ids, q_emb, q_emb0, q_multi)
+        else:
+            # NumPy mode: verdicts per pack with the label short-circuit —
+            # no cross-partition concat copies, no wide gather for pairs
+            # the label check already rejects
+            pack["keep"] = _pairs_keep_mask_numpy_lazy(
+                index, rows, q_ids, q_emb, q_emb0, q_multi, eps
+            )
+        packs.append(pack)
+    if use_pallas:
+        # ONE fused kernel call across every partition's pairs
+        live = [p for p in packs if not p["empty"] and p["rows"].size]
+        if live:
+            qg = np.concatenate([p["ops"][0] for p in live])
+            q0g = np.concatenate([p["ops"][1] for p in live])
+            eg = np.concatenate([p["ops"][2] for p in live])
+            e0g = np.concatenate([p["ops"][3] for p in live])
+            keep_all = _pairs_keep_mask(qg, q0g, eg, e0g, eps, use_pallas=True)
+            offs = np.cumsum([0] + [p["rows"].size for p in live])
+            for p, a, b in zip(live, offs[:-1], offs[1:]):
+                p["keep"] = keep_all[a:b]
+    results = []
+    stats = [] if return_stats else None
+    for p in packs:
+        Q = p["Q"]
+        if p["empty"]:
+            results.append([np.zeros((0,), np.int64) for _ in range(Q)])
+            if return_stats:
+                stats.append([{"scanned_blocks": 0, "scanned_paths": 0} for _ in range(Q)])
+            continue
+        keep = p.get("keep")
+        if keep is None:  # pallas mode with zero pairs
+            keep = np.zeros((0,), bool)
+        results.append(_split_rows(p["rows"], p["q_ids"], keep, Q))
+        if return_stats:
+            scanned = np.asarray(p["alive"].sum(axis=1))
+            stats.append(
+                [
+                    {
+                        "scanned_blocks": int(scanned[qi]),
+                        "scanned_paths": int(scanned[qi]) * p["bs"],
+                    }
+                    for qi in range(Q)
+                ]
+            )
+    if return_stats:
+        return results, stats
+    return results

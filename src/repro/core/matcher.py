@@ -7,6 +7,8 @@ key arrays (hash tables don't vectorize; sort-merge does — see DESIGN §6).
 """
 from __future__ import annotations
 
+import weakref
+
 import numpy as np
 
 from ..graphs import Graph
@@ -116,6 +118,39 @@ def join_candidates(
     return table, cols
 
 
+_EDGE_KEY_CACHE: dict = {}  # id(graph) -> keys; evicted via weakref.finalize
+
+
+def _edge_keys(g: Graph) -> np.ndarray:
+    """Globally sorted (src·n + dst) keys of every directed CSR edge.
+
+    CSR rows are grouped by ascending src and sorted within, so the flat
+    key array is already sorted — one ``np.searchsorted`` over it answers
+    edge membership for ALL candidate rows at once.  Graph-invariant, so
+    cached per graph instance (refine runs once per query on the online
+    hot path; rebuilding O(V+E) keys per query would dominate small
+    candidate tables).
+    """
+    key = id(g)
+    cached = _EDGE_KEY_CACHE.get(key)
+    if cached is None:
+        src = np.repeat(np.arange(g.n_vertices, dtype=np.int64), g.degrees)
+        cached = src * np.int64(g.n_vertices) + g.nbrs.astype(np.int64)
+        _EDGE_KEY_CACHE[key] = cached
+        weakref.finalize(g, _EDGE_KEY_CACHE.pop, key, None)
+    return cached
+
+
+def _has_edges(keys: np.ndarray, n_vertices: int, du: np.ndarray, dv: np.ndarray) -> np.ndarray:
+    """Vectorized membership: does G contain edge (du[i], dv[i]) ∀i."""
+    if keys.size == 0 or du.size == 0:
+        return np.zeros(du.shape[0], bool)
+    want = du.astype(np.int64) * np.int64(n_vertices) + dv.astype(np.int64)
+    pos = np.searchsorted(keys, want)
+    pos = np.minimum(pos, keys.size - 1)
+    return keys[pos] == want
+
+
 def refine(
     g: Graph,
     q: Graph,
@@ -123,7 +158,11 @@ def refine(
     cols: list[int],
     induced: bool = False,
 ) -> list[tuple[int, ...]]:
-    """Exact verification of every assembled assignment (zero false positives)."""
+    """Exact verification of every assembled assignment (zero false positives).
+
+    Edge checks are one flat-CSR ``searchsorted`` per query edge over all
+    candidate rows (no per-row Python binary search) — see ``_edge_keys``.
+    """
     if table.shape[0] == 0:
         return []
     nq = q.n_vertices
@@ -134,21 +173,10 @@ def refine(
     # label check (paths already enforce labels, but be defensive)
     for u in range(nq):
         ok &= g.labels[rows[:, u]] == q.labels[u]
+    keys = _edge_keys(g)
     # every query edge must exist in G
-    qe = q.edge_array()
-    for u, v in qe:
-        du = rows[:, u]
-        dv = rows[:, v]
-        # CSR membership test, vectorized
-        lo = g.offsets[du]
-        hi = g.offsets[du + 1]
-        found = np.zeros(rows.shape[0], bool)
-        # binary search per row over the CSR slice
-        for i in np.nonzero(ok)[0]:
-            seg = g.nbrs[lo[i] : hi[i]]
-            j = np.searchsorted(seg, dv[i])
-            found[i] = j < seg.shape[0] and seg[j] == dv[i]
-        ok &= found
+    for u, v in q.edge_array():
+        ok &= _has_edges(keys, g.n_vertices, rows[:, u], rows[:, v])
     if induced:
         # non-edges of q must be non-edges of G
         adj = q.adjacency_sets()
@@ -156,11 +184,7 @@ def refine(
             for v in range(u + 1, nq):
                 if v in adj[u]:
                     continue
-                for i in np.nonzero(ok)[0]:
-                    seg = g.nbrs[g.offsets[rows[i, u]] : g.offsets[rows[i, u] + 1]]
-                    j = np.searchsorted(seg, rows[i, v])
-                    if j < seg.shape[0] and seg[j] == rows[i, v]:
-                        ok[i] = False
+                ok &= ~_has_edges(keys, g.n_vertices, rows[:, u], rows[:, v])
     return [tuple(int(x) for x in r) for r in rows[ok]]
 
 

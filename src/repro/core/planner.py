@@ -19,7 +19,7 @@ import numpy as np
 from ..graphs import Graph
 from .paths import enumerate_paths
 
-__all__ = ["QueryPlan", "plan_query"]
+__all__ = ["QueryPlan", "plan_query", "candidate_plan_paths"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +40,22 @@ def _covered(paths: Sequence[tuple[int, ...]]) -> set[int]:
     return out
 
 
+def candidate_plan_paths(q: Graph, length: int) -> list:
+    """The path universe Alg. 4 plans over: all length-``l`` simple paths,
+    falling back to shorter lengths for degenerate queries.  Exposed so
+    the engine can batch-probe exactly this set for ``weight="dr"``."""
+    all_paths = enumerate_paths(q, np.arange(q.n_vertices, dtype=np.int32), length)
+    if all_paths.shape[0] == 0:
+        # degenerate query (shorter than l): fall back to max-length paths
+        for shorter in range(length - 1, 0, -1):
+            all_paths = enumerate_paths(q, np.arange(q.n_vertices, dtype=np.int32), shorter)
+            if all_paths.shape[0]:
+                break
+        else:
+            all_paths = np.arange(q.n_vertices, dtype=np.int32)[:, None]
+    return [tuple(int(x) for x in row) for row in all_paths]
+
+
 def plan_query(
     q: Graph,
     length: int,
@@ -50,16 +66,7 @@ def plan_query(
     seed: int = 0,
 ) -> QueryPlan:
     """Alg. 4. Returns the best covering path set under the cost model."""
-    all_paths = enumerate_paths(q, np.arange(q.n_vertices, dtype=np.int32), length)
-    if all_paths.shape[0] == 0:
-        # degenerate query (shorter than l): fall back to max-length paths
-        for shorter in range(length - 1, 0, -1):
-            all_paths = enumerate_paths(q, np.arange(q.n_vertices, dtype=np.int32), shorter)
-            if all_paths.shape[0]:
-                break
-        else:
-            all_paths = np.arange(q.n_vertices, dtype=np.int32)[:, None]
-    paths = [tuple(int(x) for x in row) for row in all_paths]
+    paths = candidate_plan_paths(q, length)
     deg = q.degrees
 
     if weight_fn is None:
@@ -87,41 +94,48 @@ def plan_query(
         raise ValueError(f"unknown strategy {strategy}")
 
     n_q = q.n_vertices
+    sets = {p: frozenset(p) for p in paths}  # hoisted out of the greedy loop
     best_q: list[tuple[int, ...]] | None = None
     best_cost = float("inf")
     for p0 in initial:
-        local = [p0]
+        local = {p0}
+        order = [p0]
         cost = w[p0]
         cov = set(p0)
         stuck = False
         while len(cov) < n_q:
-            # candidates connecting to the covered set, adding new vertices
-            cands = [
-                p
-                for p in paths
-                if p not in local
-                and (set(p) & cov)
-                and (set(p) - cov)
-            ]
-            if not cands:
-                # disconnected coverage fallback: any path with a new vertex
-                cands = [p for p in paths if set(p) - cov]
-                if not cands:
-                    stuck = True
-                    break
-            # min overlap, then min weight (Alg. 4 line 7)
-            p = min(cands, key=lambda p: (len(set(p) & cov), w[p]))
-            local.append(p)
-            cost += w[p]
-            cov |= set(p)
+            # one pass: prefer paths connecting to the covered set with min
+            # (overlap, weight) — Alg. 4 line 7; fall back to disconnected
+            # paths adding new vertices (same order/tie-breaks as the
+            # original two-pass candidate scan)
+            best_key = None
+            best_p = None
+            for p in paths:
+                if p in local:
+                    continue
+                sp = sets[p]
+                inter = len(sp & cov)
+                if len(sp) == inter:  # no new vertices
+                    continue
+                key = (inter == 0, inter, w[p])
+                if best_key is None or key < best_key:
+                    best_key = key
+                    best_p = p
+            if best_p is None:
+                stuck = True
+                break
+            local.add(best_p)
+            order.append(best_p)
+            cost += w[best_p]
+            cov |= sets[best_p]
         if stuck:
             continue
         if cost < best_cost:
             best_cost = cost
-            best_q = local
+            best_q = order
     if best_q is None:
         # coverage impossible at this length (rare, e.g. pendant chains):
         # greedily cover with shorter paths
-        best_q = [tuple(int(x) for x in row) for row in all_paths]
+        best_q = list(paths)
         best_cost = sum(w.get(p, 0.0) for p in best_q)
     return QueryPlan(paths=best_q, cost=float(best_cost), strategy=f"{strategy}({weight})")

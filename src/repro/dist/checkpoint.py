@@ -1,0 +1,137 @@
+"""Atomic, async, elastic checkpointing.
+
+Layout: one ``step_<n>.npz`` per checkpoint under the manager's dir.
+Atomicity: arrays are staged to ``*.tmp`` and ``os.replace``d into
+place, so a crash mid-write never leaves a readable-but-torn file.
+Elasticity: ``restore(template, shardings=...)`` re-lays leaves onto any
+target mesh via ``jax.device_put`` — the source topology is irrelevant
+because the serialized form is plain host arrays.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+_PREFIX = "step_"
+
+
+def _flatten(tree):
+    """Leaves + stable string keys encoding the tree path."""
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = [jax.tree_util.keystr(path) for path, _ in leaves_with_path]
+    leaves = [leaf for _, leaf in leaves_with_path]
+    return keys, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ paths ---
+    def _path(self, step: int) -> Path:
+        return self.dir / f"{_PREFIX}{step}.npz"
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for p in self.dir.glob(f"{_PREFIX}*.npz"):
+            try:
+                steps.append(int(p.stem[len(_PREFIX):]))
+            except ValueError:
+                continue
+        return sorted(steps)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------- save ---
+    def save(self, step: int, state) -> None:
+        keys, leaves, _ = _flatten(state)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        self._write(step, keys, host)
+
+    def save_async(self, step: int, state) -> None:
+        """Snapshot to host, then write on a background thread."""
+        keys, leaves, _ = _flatten(state)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, keys, host), daemon=True
+        )
+        self._thread.start()
+
+    def _write(self, step: int, keys: list, host: list) -> None:
+        arrays = {f"arr_{i}": x for i, x in enumerate(host)}
+        arrays["__keys__"] = np.asarray(json.dumps(keys))
+        final = self._path(step)
+        tmp = final.with_suffix(final.suffix + ".tmp")
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+        self._gc()
+
+    def wait(self) -> None:
+        with self._lock:
+            t, self._thread = self._thread, None
+        if t is not None:
+            t.join()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            try:
+                self._path(s).unlink()
+            except FileNotFoundError:
+                pass
+
+    # ---------------------------------------------------------- restore ---
+    def restore(self, template, step: int | None = None, shardings=None):
+        """Load a checkpoint into ``template``'s tree structure.
+
+        ``shardings``: optional tree (matching ``template``) of
+        ``jax.sharding.Sharding`` — each restored leaf is ``device_put``
+        onto it (the elastic path: target mesh ≠ source mesh).
+        Returns ``(restored_tree, step)``.
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        with np.load(self._path(step)) as z:
+            saved_keys = json.loads(str(z["__keys__"]))
+            saved = [z[f"arr_{i}"] for i in range(len(saved_keys))]
+        keys, leaves, treedef = _flatten(template)
+        if keys != saved_keys:
+            raise ValueError(
+                f"checkpoint tree mismatch: saved {saved_keys} vs template {keys}"
+            )
+        shard_leaves = [None] * len(leaves)
+        if shardings is not None:
+            s_keys, shard_leaves, _ = _flatten(shardings)
+            if s_keys != keys:
+                raise ValueError("shardings tree does not match template")
+        out = []
+        for key, tmpl, arr, shard in zip(keys, leaves, saved, shard_leaves):
+            t = jnp.asarray(tmpl) if not hasattr(tmpl, "shape") else tmpl
+            if tuple(t.shape) != tuple(arr.shape):
+                raise ValueError(
+                    f"shape mismatch at {key}: checkpoint {arr.shape} vs template {t.shape}"
+                )
+            arr = arr.astype(t.dtype) if hasattr(t, "dtype") else arr
+            out.append(jax.device_put(arr, shard) if shard is not None else jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out), int(step)

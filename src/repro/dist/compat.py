@@ -1,0 +1,56 @@
+"""Compatibility shims for older jax releases.
+
+The codebase (and its tests) target the current jax mesh API:
+
+  * ``jax.sharding.AxisType`` enum,
+  * ``jax.make_mesh(shape, names, axis_types=...)``.
+
+On the jax pinned in this container (0.4.x) neither exists.  Rather than
+fork every call site, ``install()`` grafts no-op equivalents onto jax:
+``AxisType`` becomes a plain enum and ``make_mesh`` accepts and ignores
+``axis_types`` (0.4.x meshes are implicitly "auto").  Installing is
+idempotent and does nothing on jax versions that already provide them.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+__all__ = ["install"]
+
+
+def install() -> None:
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+            if check_vma is not None and "check_rep" not in kw:
+                kw["check_rep"] = check_vma  # renamed in newer jax
+            return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic wrappers
+        return
+    if "axis_types" not in params:
+        orig = jax.make_mesh
+
+        @functools.wraps(orig)
+        def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+            del axis_types  # 0.4.x meshes have no explicit axis types
+            return orig(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh

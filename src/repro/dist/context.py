@@ -1,0 +1,51 @@
+"""Mesh context + in-graph sharding hints.
+
+``use_mesh(mesh)`` scopes a global mesh; ``maybe_shard(x, *entries)``
+applies ``with_sharding_constraint`` against that mesh (axis-filtered),
+and is an exact no-op when no mesh is active — model code calls it
+unconditionally and stays runnable on a single device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import filter_spec
+
+__all__ = ["use_mesh", "current_mesh", "maybe_shard"]
+
+_state = threading.local()
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Activate ``mesh`` for ``maybe_shard`` calls in this thread."""
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def maybe_shard(x, *entries):
+    """Constrain ``x`` to ``P(*entries)`` if a mesh is active, else no-op.
+
+    Entries follow PartitionSpec syntax (str | tuple of str | None) and
+    may name axes the active mesh doesn't have — those are dropped, so
+    specs written for the pod×data×model production mesh run unchanged
+    on test meshes.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = filter_spec(P(*entries), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

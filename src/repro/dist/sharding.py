@@ -1,0 +1,160 @@
+"""PartitionSpec rules for every param family + spec→sharding lowering.
+
+``DP`` is the composite data-parallel axis ``("pod", "data")``: batch
+dims shard over both the pod and the intra-pod data axis when present.
+Specs are written against the *largest* mesh (pod × data × model);
+``to_shardings`` filters out axis names a given mesh doesn't carry, so
+the same spec tree drives single-pod, multi-pod and test meshes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "DP",
+    "filter_spec",
+    "lm_param_specs",
+    "recsys_param_specs",
+    "replicated_specs",
+    "to_shardings",
+]
+
+# composite data-parallel axis: batch shards over pod × data when available
+DP = ("pod", "data")
+
+
+def _filter_entry(entry, names: frozenset):
+    """Drop mesh-absent axis names from one PartitionSpec entry."""
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return entry if entry in names else None
+    kept = tuple(a for a in entry if a in names)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def filter_spec(spec: P, mesh) -> P:
+    """Restrict ``spec`` to the axis names ``mesh`` actually has."""
+    names = frozenset(mesh.axis_names)
+    return P(*(_filter_entry(e, names) for e in spec))
+
+
+def to_shardings(mesh, pspecs):
+    """PartitionSpec tree → NamedSharding tree on ``mesh`` (axis-filtered)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, filter_spec(s, mesh)),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def replicated_specs(params):
+    """Fully replicated spec tree (small models, per-partition GNNs)."""
+    return jax.tree.map(lambda _: P(), params)
+
+
+def _spec_for_lm_leaf(path: str, leaf, fsdp: bool) -> P:
+    """Megatron-style TP rules by param name; optional FSDP over data.
+
+    Column-parallel (shard the output dim on "model"): wq/wk/wv, w1/w3,
+    MoE up-projections, lm_head.  Row-parallel (shard the input dim):
+    wo, w2, MoE down-projection.  Embedding shards the vocab dim.
+    MoE expert tables keep the expert dim on "model" (expert parallel).
+    """
+    nd = leaf.ndim
+    if nd <= 1:
+        return P()  # norms, biases: replicated
+    lead = ("data",) if fsdp else ()
+
+    def col():  # shard last dim on model
+        mid = (None,) * (nd - 2)
+        first = ("data" if fsdp else None,)
+        return P(*(first + mid + ("model",)))
+
+    def row():  # shard second-to-last... for 2D: (model, data|None)
+        mid = (None,) * (nd - 2)
+        return P(*(("model",) + mid + (("data",) if fsdp else (None,))))
+
+    name = path.split("/")[-1]
+    if name in ("router", "shared_w1", "shared_w3", "shared_w2"):
+        return P(*([None] * nd))
+    if "moe" in path:
+        # expert parallel: the expert dim leads (under a stacked-layer dim)
+        spec = [None] * nd
+        spec[0] = "model"
+        if fsdp and nd >= 3:
+            spec[1] = "data"
+        return P(*spec)
+    if name in ("wq", "wk", "wv", "w1", "w3", "w_dkv", "w_krope", "lm_head"):
+        return col()
+    if name in ("wo", "w2", "w_uk", "w_uv"):
+        return row()
+    if name == "embed":
+        return P("model", *([None] * (nd - 1)))
+    del lead
+    return P(*([None] * nd))
+
+
+def _walk(tree, path=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _walk(v, f"{path}/{k}" if path else str(k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _walk(v, f"{path}/{i}")
+    else:
+        yield path, tree
+
+
+def _rebuild(tree, leaves_iter):
+    if isinstance(tree, dict):
+        return {k: _rebuild(v, leaves_iter) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        out = [_rebuild(v, leaves_iter) for v in tree]
+        return out if isinstance(tree, list) else tuple(out)
+    return next(leaves_iter)
+
+
+def lm_param_specs(params, fsdp: bool = False):
+    """Transformer param tree → PartitionSpec tree (TP + optional FSDP).
+
+    The stacked ``layers`` subtree carries a leading scan dim which is
+    never sharded; the per-name rule applies to the trailing dims.
+    """
+
+    def spec_for(path, leaf):
+        in_stack = path.startswith("layers/") or "/layers/" in path or path == "layers"
+        if in_stack and leaf.ndim >= 1:
+            inner = _spec_for_lm_leaf(path, _Shaped(leaf.shape[1:]), fsdp)
+            return P(None, *inner)
+        return _spec_for_lm_leaf(path, leaf, fsdp)
+
+    specs = [spec_for(p, l) for p, l in _walk(params)]
+    return _rebuild(params, iter(specs))
+
+
+class _Shaped:
+    """Shape-only stand-in so stacked leaves reuse the per-leaf rule."""
+
+    def __init__(self, shape):
+        self.shape = tuple(shape)
+
+    @property
+    def ndim(self):
+        return len(self.shape)
+
+
+def recsys_param_specs(params):
+    """DCN specs: embedding tables model-parallel over the field dim
+    (the tables dominate bytes); dense cross/MLP layers replicated."""
+
+    def spec_for(path, leaf):
+        if path.split("/")[0] == "tables":
+            return P("model", *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    specs = [spec_for(p, l) for p, l in _walk(params)]
+    return _rebuild(params, iter(specs))

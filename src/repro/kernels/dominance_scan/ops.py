@@ -4,6 +4,13 @@
 multiple (128), runs the Pallas kernel (interpret=True off-TPU), and
 slices the mask back.  Padding uses +inf-like sentinels that can never
 produce a false positive.
+
+A batched query form is accepted transparently: ``q`` of shape (Q, D)
+(with ``q0`` (Q, D0)) returns a (Q, N) mask from ONE fused pallas_call —
+this is the online hot path of the engine (all query paths of a batch of
+queries against one partition's leaf tiles).  Batched shapes are
+*bucketed* (Q and the padded N round up to powers of two) so the jit
+cache stays small across ragged candidate sets.
 """
 from __future__ import annotations
 
@@ -11,14 +18,32 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import dominance_scan_pallas
-from .ref import dominance_scan_ref
+from .kernel import (
+    dominance_scan_batch_pallas,
+    dominance_scan_pairs_pallas,
+    dominance_scan_pallas,
+)
+from .ref import dominance_scan_batch_ref, dominance_scan_pairs_ref, dominance_scan_ref
 
-__all__ = ["dominance_scan", "dominance_scan_ref"]
+__all__ = [
+    "dominance_scan",
+    "dominance_scan_ref",
+    "dominance_scan_batch",
+    "dominance_scan_batch_ref",
+    "dominance_scan_pairs",
+    "dominance_scan_pairs_ref",
+]
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _pow2_at_least(n: int, floor: int) -> int:
+    out = floor
+    while out < n:
+        out *= 2
+    return out
 
 
 def dominance_scan(
@@ -31,7 +56,15 @@ def dominance_scan(
     use_pallas: bool = True,
     interpret: bool | None = None,
 ):
-    """q,q0 (D,); emb,emb0 (N, D) → int32 keep mask (N,)."""
+    """q,q0 (D,); emb,emb0 (N, D) → int32 keep mask (N,).
+
+    Batched: q (Q, D), q0 (Q, D0) → (Q, N) via ``dominance_scan_batch``.
+    """
+    if np.ndim(q) == 2:
+        return dominance_scan_batch(
+            q, q0, emb, emb0, eps=eps, block_n=block_n,
+            use_pallas=use_pallas, interpret=interpret,
+        )
     if not use_pallas:
         return dominance_scan_ref(q, q0, emb, emb0, eps)
     N, D = emb.shape
@@ -52,3 +85,90 @@ def dominance_scan(
     emb0p = jnp.pad(emb0p, ((0, Np - N), (0, 0)), constant_values=jnp.inf)
     mask = dominance_scan_pallas(qp, q0p, embp, emb0p, block_n=block_n, eps=eps, interpret=interpret)
     return mask[:N]
+
+
+def dominance_scan_batch(
+    q,
+    q0,
+    emb,
+    emb0,
+    eps: float = 1e-6,
+    block_q: int = 8,
+    block_n: int = 512,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+):
+    """q,q0 (Q, D/D0); emb,emb0 (N, D/D0) → int32 keep mask (Q, N).
+
+    One pallas_call fuses label equality + dominance for every query path
+    against every leaf row.  Row padding uses +inf emb0 rows (rejected by
+    the label term); query padding uses +inf q rows (rejected by the
+    dominance term) — |inf−inf| and inf−inf comparisons come out False,
+    so padded cells never leak a keep.
+    """
+    Q, D = q.shape
+    N = emb.shape[0]
+    D0 = q0.shape[1]
+    if Q == 0 or N == 0:
+        return jnp.zeros((Q, N), jnp.int32)
+    if not use_pallas:
+        return dominance_scan_batch_ref(q, q0, emb, emb0, eps)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    Dp = int(np.ceil(D / 128) * 128)
+    D0p = int(np.ceil(D0 / 128) * 128)
+    # bucket Q and N to powers of two → bounded jit-cache growth over the
+    # ragged candidate-set sizes the engine produces
+    Qp = _pow2_at_least(Q, block_q)
+    Np = _pow2_at_least(N, block_n)
+    qp = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, Dp - D)))
+    qp = jnp.pad(qp, ((0, Qp - Q), (0, 0)), constant_values=jnp.inf)
+    q0p = jnp.pad(q0.astype(jnp.float32), ((0, Qp - Q), (0, D0p - D0)))
+    embp = jnp.pad(emb.astype(jnp.float32), ((0, Np - N), (0, Dp - D)))
+    emb0p = jnp.pad(emb0.astype(jnp.float32), ((0, 0), (0, D0p - D0)))
+    emb0p = jnp.pad(emb0p, ((0, Np - N), (0, 0)), constant_values=jnp.inf)
+    mask = dominance_scan_batch_pallas(
+        qp, q0p, embp, emb0p, block_q=block_q, block_n=block_n, eps=eps, interpret=interpret
+    )
+    return mask[:Q, :N]
+
+
+def dominance_scan_pairs(
+    qg,
+    q0g,
+    eg,
+    e0g,
+    eps: float = 1e-6,
+    block_t: int = 2048,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+):
+    """Row-aligned (query, path) pairs: qg,eg (T, D); q0g,e0g (T, D0) → (T,).
+
+    The engine's fused leaf scan (work ∝ Σ_q surviving rows).  T buckets
+    to a power of two; padded pair rows use qg=+inf (dominance-rejected).
+    Feature dims pad to the 128-lane multiple only on real TPUs —
+    interpret mode (CPU) runs unpadded, which is ~7× less wasted compare
+    work at the d_cat≈18 shapes the paper configs produce.
+    """
+    T, D = qg.shape
+    D0 = q0g.shape[1]
+    if T == 0:
+        return jnp.zeros((0,), jnp.int32)
+    if not use_pallas:
+        return dominance_scan_pairs_ref(qg, q0g, eg, e0g, eps)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    Dp = D if interpret else int(np.ceil(D / 128) * 128)
+    D0p = D0 if interpret else int(np.ceil(D0 / 128) * 128)
+    Tp = _pow2_at_least(T, min(block_t, 256))
+    # interpret mode pays per-grid-step emulation overhead, not VMEM limits:
+    # one big tile beats many small ones (real TPUs keep the VMEM-sized tile)
+    block_t = min(Tp, 1 << 16) if interpret else min(block_t, Tp)
+    qgp = jnp.pad(qg.astype(jnp.float32), ((0, 0), (0, Dp - D)))
+    qgp = jnp.pad(qgp, ((0, Tp - T), (0, 0)), constant_values=jnp.inf)
+    q0gp = jnp.pad(q0g.astype(jnp.float32), ((0, Tp - T), (0, D0p - D0)))
+    egp = jnp.pad(eg.astype(jnp.float32), ((0, Tp - T), (0, Dp - D)))
+    e0gp = jnp.pad(e0g.astype(jnp.float32), ((0, Tp - T), (0, D0p - D0)))
+    mask = dominance_scan_pairs_pallas(
+        qgp, q0gp, egp, e0gp, block_t=block_t, eps=eps, interpret=interpret
+    )
+    return mask[:T]

@@ -3,10 +3,24 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["dominance_scan_ref"]
+__all__ = ["dominance_scan_ref", "dominance_scan_batch_ref", "dominance_scan_pairs_ref"]
 
 
 def dominance_scan_ref(q, q0, emb, emb0, eps: float = 1e-6):
     dom = jnp.all(q[None, :] <= emb + eps, axis=-1)
     lab = jnp.all(jnp.abs(emb0 - q0[None, :]) <= eps, axis=-1)
+    return (dom & lab).astype(jnp.int32)
+
+
+def dominance_scan_batch_ref(q, q0, emb, emb0, eps: float = 1e-6):
+    """q (Q, D), q0 (Q, D0) vs emb (N, D), emb0 (N, D0) → (Q, N) int32."""
+    dom = jnp.all(q[:, None, :] <= emb[None, :, :] + eps, axis=-1)
+    lab = jnp.all(jnp.abs(emb0[None, :, :] - q0[:, None, :]) <= eps, axis=-1)
+    return (dom & lab).astype(jnp.int32)
+
+
+def dominance_scan_pairs_ref(qg, q0g, eg, e0g, eps: float = 1e-6):
+    """Row-aligned pairs: qg,eg (T, D); q0g,e0g (T, D0) → (T,) int32."""
+    dom = jnp.all(qg <= eg + eps, axis=-1)
+    lab = jnp.all(jnp.abs(e0g - q0g) <= eps, axis=-1)
     return (dom & lab).astype(jnp.int32)

@@ -1,5 +1,6 @@
 """Elastic restore: a checkpoint written single-device restores onto an
 8-device mesh with production shardings (subprocess: device count differs)."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -16,7 +17,8 @@ def test_elastic_restore_across_device_counts(tmp_path):
         print("WROTE")
         """
     )
-    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"}
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+         **({"JAX_PLATFORMS": os.environ["JAX_PLATFORMS"]} if "JAX_PLATFORMS" in os.environ else {})}
     p1 = subprocess.run([sys.executable, "-c", write], capture_output=True, text=True, timeout=300, env=env)
     assert "WROTE" in p1.stdout, p1.stderr[-2000:]
 

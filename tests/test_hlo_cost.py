@@ -1,5 +1,6 @@
 """launch/hlo_cost analyzer validation: loop-aware FLOPs/bytes/collectives
 against programs with known analytic costs."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -62,6 +63,7 @@ def test_collectives_counted_with_loop_multiplier():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp
+        import repro.dist  # installs AxisType/make_mesh compat on older jax
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.launch.hlo_cost import analyze_hlo
 
@@ -94,6 +96,7 @@ def test_collectives_counted_with_loop_multiplier():
         capture_output=True,
         text=True,
         timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             **({"JAX_PLATFORMS": os.environ["JAX_PLATFORMS"]} if "JAX_PLATFORMS" in os.environ else {})},
     )
     assert "HLO_COST_OK" in proc.stdout, proc.stdout + proc.stderr[-2500:]

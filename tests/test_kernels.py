@@ -8,7 +8,14 @@ import numpy as np
 import pytest
 
 from repro.kernels.cross_interact.ops import cross_interact, cross_interact_ref
-from repro.kernels.dominance_scan.ops import dominance_scan, dominance_scan_ref
+from repro.kernels.dominance_scan.ops import (
+    dominance_scan,
+    dominance_scan_batch,
+    dominance_scan_batch_ref,
+    dominance_scan_pairs,
+    dominance_scan_pairs_ref,
+    dominance_scan_ref,
+)
 from repro.kernels.flash_attention.ops import flash_attention, flash_attention_ref
 from repro.kernels.star_agg.ops import star_agg, star_agg_ref
 
@@ -32,6 +39,41 @@ def test_dominance_scan_sweep(n, d, block_n):
     ref = dominance_scan_ref(q, q0, emb, emb0)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
     assert 0 < int(ref.sum()) < n  # non-trivial: planted row kept, most pruned
+
+
+@pytest.mark.parametrize("q_n,n,d", [(1, 16, 6), (7, 777, 18), (16, 2048, 12), (33, 100, 128)])
+def test_dominance_scan_batch_sweep(q_n, n, d):
+    """(Q, D) query batch × (N, D) paths in one pallas_call == batched ref."""
+    rng = np.random.default_rng(q_n * 1000 + n + d)
+    emb = rng.random((n, d)).astype(np.float32)
+    emb0 = rng.random((n, d)).astype(np.float32)
+    js = rng.integers(0, n, q_n)
+    q = (emb[js] * rng.uniform(0.8, 1.0, (q_n, 1))).astype(np.float32)
+    q0 = emb0[js]
+    out = dominance_scan_batch(q, q0, emb, emb0)
+    ref = dominance_scan_batch_ref(q, q0, emb, emb0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # q.ndim == 2 dispatch through the unified entry point
+    out2 = dominance_scan(q, q0, emb, emb0)
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(ref))
+    # single-row parity with the single-query kernel
+    s = dominance_scan(q[0], q0[0], emb, emb0)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ref)[0])
+
+
+@pytest.mark.parametrize("t,d", [(1, 6), (100, 18), (2048, 12), (5000, 24)])
+def test_dominance_scan_pairs_sweep(t, d):
+    """Row-aligned (query, path) pairs kernel == pairs ref (the engine's
+    work-proportional fused leaf scan)."""
+    rng = np.random.default_rng(t + d)
+    eg = rng.random((t, d)).astype(np.float32)
+    e0g = rng.random((t, d)).astype(np.float32)
+    qg = (eg * rng.uniform(0.8, 1.0, (t, 1))).astype(np.float32)
+    q0g = e0g.copy()
+    q0g[t // 2:] = rng.random((t - t // 2, d)).astype(np.float32)  # half fail label
+    out = dominance_scan_pairs(qg, q0g, eg, e0g)
+    ref = dominance_scan_pairs_ref(qg, q0g, eg, e0g)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
 def test_dominance_scan_multi_gnn_concat():

@@ -1,6 +1,7 @@
 """MoE EP parity: the shard_map expert-parallel block (psum combine,
 optional ZeRO-3 gathers) computes the same output + grads as the local
 single-device dispatch (8-device subprocess)."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -61,6 +62,7 @@ def test_moe_expert_parallel_matches_local():
         capture_output=True,
         text=True,
         timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+         **({"JAX_PLATFORMS": os.environ["JAX_PLATFORMS"]} if "JAX_PLATFORMS" in os.environ else {})},
     )
     assert "MOE_EP_OK" in proc.stdout, proc.stdout + proc.stderr[-3000:]

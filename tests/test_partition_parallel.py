@@ -1,6 +1,7 @@
 """§Perf B1 correctness: partition-parallel GNN (halo exchange) computes
 the SAME loss as the dense full-graph path, using metadata built from the
 real partitioner.  Runs in a subprocess with 8 host devices."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -62,6 +63,7 @@ def test_partition_parallel_matches_dense():
         capture_output=True,
         text=True,
         timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+         **({"JAX_PLATFORMS": os.environ["JAX_PLATFORMS"]} if "JAX_PLATFORMS" in os.environ else {})},
     )
     assert "PARTITION_PARALLEL_OK" in proc.stdout, proc.stdout + proc.stderr[-3000:]

@@ -1,5 +1,6 @@
 """Pipeline parallelism (DESIGN §5): GPipe schedule over a 'pipe' axis
 matches sequential layer application exactly (4-stage subprocess test)."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -42,6 +43,7 @@ def test_pipeline_matches_sequential():
         capture_output=True,
         text=True,
         timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+         **({"JAX_PLATFORMS": os.environ["JAX_PLATFORMS"]} if "JAX_PLATFORMS" in os.environ else {})},
     )
     assert "PIPELINE_OK" in proc.stdout, proc.stdout + proc.stderr[-3000:]

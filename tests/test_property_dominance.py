@@ -11,6 +11,9 @@
 """
 import numpy as np
 import jax
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this image")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
