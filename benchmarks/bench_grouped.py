@@ -1,0 +1,126 @@
+"""GNN-PGE grouped two-level probe vs the per-path probe, same engine.
+
+Builds one engine with ``index_kind="grouped"`` (the per-path arrays
+stay intact, so both probe layers run against identical embeddings),
+then measures on the same query batch:
+
+  * path    — ``match_many(index_kind="path")``: block descent straight
+    to leaf rows, one fused member scan;
+  * grouped — ``match_many(index_kind="grouped")``: block descent →
+    group-MBR scan → member scan on surviving groups only.
+
+Match sets are asserted byte-identical; the leaf-pair counters prove the
+grouped probe issues measurably fewer leaf-level dominance comparisons.
+Emits CSV rows plus a JSON artifact (``--json PATH`` or ``BENCH_JSON``)
+with group-count/compression stats so CI can trend them
+(benchmarks/compare.py gates regressions).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.index import PAIR_COUNTERS, reset_pair_counters
+
+from .common import build_engine, emit, make_graph, sample_queries
+
+BATCH = 16
+GROUP_SIZE = 16
+
+
+def _time_best(fn, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(full: bool = False, json_path: str | None = None) -> dict:
+    n = 50_000 if full else 8_000
+    g = make_graph(n=n, seed=11)
+    eng = build_engine(
+        g,
+        partition_size=625 if full else 250,
+        index_kind="grouped",
+        group_size=GROUP_SIZE,
+    )
+    queries = sample_queries(g, n=BATCH, seed0=42)
+
+    # warm up both probe layers (jit/pallas compiles leave the timed region)
+    # and count the leaf-level dominance comparisons each one issues
+    reset_pair_counters()
+    path_all = eng.match_many(queries, index_kind="path")
+    leaf_pairs_path = PAIR_COUNTERS["leaf_pairs"]
+    reset_pair_counters()
+    grouped_all = eng.match_many(queries, index_kind="grouped")
+    leaf_pairs_grouped = PAIR_COUNTERS["leaf_pairs"]
+    group_pairs = PAIR_COUNTERS["group_pairs"]
+    for qi, (a, b) in enumerate(zip(grouped_all, path_all)):
+        assert a == b, f"query {qi}: grouped/path match sets differ"
+    assert leaf_pairs_grouped < leaf_pairs_path, (
+        f"grouped probe should cut leaf comparisons "
+        f"({leaf_pairs_grouped} vs {leaf_pairs_path})"
+    )
+
+    t_path = _time_best(lambda: eng.match_many(queries, index_kind="path"))
+    t_grouped = _time_best(lambda: eng.match_many(queries, index_kind="grouped"))
+
+    speedup = t_path / max(t_grouped, 1e-12)
+    leaf_ratio = leaf_pairs_path / max(leaf_pairs_grouped, 1)
+    group_stats = [m.index.groups.stats() for m in eng.models if m.index.groups]
+    n_groups = int(eng.offline_stats["n_groups"])
+    group_bytes = int(eng.offline_stats["group_bytes"])
+    n_paths = int(eng.offline_stats["n_paths"])
+    nq = len(queries)
+    emit("grouped/path_total", 1e6 * t_path, f"n_queries={nq}")
+    emit("grouped/grouped_total", 1e6 * t_grouped, f"speedup={speedup:.2f}x")
+    emit("grouped/leaf_pairs_path", float(leaf_pairs_path), "")
+    emit("grouped/leaf_pairs_grouped", float(leaf_pairs_grouped), f"ratio={leaf_ratio:.1f}x")
+    emit("grouped/group_pairs", float(group_pairs), f"n_groups={n_groups}")
+
+    rec = {
+        "n_vertices": int(g.n_vertices),
+        "n_queries": nq,
+        "path_total_s": t_path,
+        "grouped_total_s": t_grouped,
+        "speedup": speedup,
+        "match_sets_identical": True,
+        # leaf-comparison accounting (the GNN-PGE win CI trends)
+        "leaf_pairs_path": int(leaf_pairs_path),
+        "leaf_pairs_grouped": int(leaf_pairs_grouped),
+        "group_pairs": int(group_pairs),
+        "leaf_pair_ratio": leaf_ratio,
+        "fewer_leaf_comparisons": bool(leaf_pairs_grouped < leaf_pairs_path),
+        # group sidecar size/compression stats
+        "n_paths": n_paths,
+        "n_groups": n_groups,
+        "paths_per_group": n_paths / max(n_groups, 1),
+        "group_bytes": group_bytes,
+        "index_bytes": int(eng.offline_stats["index_bytes"]),
+        "mean_group_members": (
+            sum(s["mean_members"] * s["n_groups"] for s in group_stats) / max(n_groups, 1)
+        ),
+    }
+    json_path = json_path or os.environ.get("BENCH_JSON")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    rec = run(full=args.full, json_path=args.json)
+    print(
+        f"# grouped speedup over path: {rec['speedup']:.2f}x, "
+        f"leaf comparisons cut {rec['leaf_pair_ratio']:.1f}x"
+    )

@@ -19,7 +19,6 @@ import json
 import os
 import time
 
-import numpy as np
 
 from .common import build_engine, emit, make_graph, sample_queries
 

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.core import GnnPeConfig, GnnPeEngine, TrainConfig
 from repro.graphs import newman_watts_strogatz, random_connected_query

@@ -1,0 +1,125 @@
+"""CI bench-regression gate: diff fresh BENCH_*.json against a baseline.
+
+Usage (what the workflow runs)::
+
+    python -m benchmarks.compare \
+        --current-dir . --baseline-dir benchmarks/baselines \
+        [--files BENCH_online.json BENCH_grouped.json] [--threshold 0.25]
+
+For each bench file the gate enforces:
+
+  * every ``bool_true`` key (exactness flags like ``match_sets_identical``
+    and ``fewer_leaf_comparisons``) is true in the CURRENT record —
+    baseline-independent, always fatal;
+  * every timing key regresses by at most ``--threshold`` (default 25%)
+    relative to the baseline;
+  * every higher-is-better key (speedups, leaf-comparison ratios) drops
+    by at most ``--threshold``.
+
+The baseline is the previous successful run's artifact when the workflow
+managed to download it, else the committed ``benchmarks/baselines/``
+snapshot.  A missing baseline file downgrades the timing checks to a
+warning (first run of a new bench) but still enforces the boolean gates.
+
+Exit status 0 = pass, 1 = regression (CI fails the job).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# per-file gate spec: which keys are timings (lower is better), which are
+# quality ratios (higher is better), and which must simply be true
+SPECS = {
+    "BENCH_online.json": {
+        "lower_is_better": ["batched_total_s", "single_latency_batched_s"],
+        "higher_is_better": ["speedup"],
+        "bool_true": ["match_sets_identical"],
+    },
+    "BENCH_grouped.json": {
+        "lower_is_better": ["grouped_total_s"],
+        "higher_is_better": ["leaf_pair_ratio"],
+        "bool_true": ["match_sets_identical", "fewer_leaf_comparisons"],
+    },
+}
+DEFAULT_FILES = list(SPECS)
+
+
+def _load(path: str) -> dict | None:
+    if not os.path.isfile(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare_file(name: str, current: dict, baseline: dict | None, threshold: float) -> list:
+    """Returns a list of (fatal, message) verdicts for one bench file."""
+    spec = SPECS.get(name, {})
+    verdicts: list[tuple[bool, str]] = []
+    for key in spec.get("bool_true", []):
+        ok = bool(current.get(key, False))
+        msg = f"{name}: {key} = {current.get(key)!r}"
+        if not ok:
+            msg += "  << MUST BE TRUE"
+        verdicts.append((not ok, msg))
+    if baseline is None:
+        verdicts.append((False, f"{name}: no baseline — timing checks skipped"))
+        return verdicts
+    for key in spec.get("lower_is_better", []):
+        cur, base = current.get(key), baseline.get(key)
+        if cur is None or base is None or base <= 0:
+            verdicts.append((False, f"{name}: {key} missing — skipped"))
+            continue
+        ratio = cur / base
+        bad = ratio > 1.0 + threshold
+        msg = f"{name}: {key} {base:.4g} -> {cur:.4g} ({ratio:.2f}x)"
+        if bad:
+            msg += f"  << SLOWDOWN > {threshold:.0%}"
+        verdicts.append((bad, msg))
+    for key in spec.get("higher_is_better", []):
+        cur, base = current.get(key), baseline.get(key)
+        if cur is None or base is None or base <= 0:
+            verdicts.append((False, f"{name}: {key} missing — skipped"))
+            continue
+        ratio = cur / base
+        bad = ratio < 1.0 - threshold
+        msg = f"{name}: {key} {base:.4g} -> {cur:.4g} ({ratio:.2f}x)"
+        if bad:
+            msg += f"  << DROP > {threshold:.0%}"
+        verdicts.append((bad, msg))
+    return verdicts
+
+
+def main(argv: list | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current-dir", default=".")
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines")
+    ap.add_argument("--files", nargs="+", default=DEFAULT_FILES)
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="max fractional slowdown/drop before failing (default 0.25)",
+    )
+    args = ap.parse_args(argv)
+
+    failed = False
+    for name in args.files:
+        current = _load(os.path.join(args.current_dir, name))
+        if current is None:
+            print(f"{name}: MISSING from {args.current_dir}  << bench did not run")
+            failed = True
+            continue
+        baseline = _load(os.path.join(args.baseline_dir, name))
+        for fatal, msg in compare_file(name, current, baseline, args.threshold):
+            print(("FAIL " if fatal else "  ok ") + msg)
+            failed |= fatal
+    print("=> " + ("REGRESSION — failing the job" if failed else "bench gate passed"))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

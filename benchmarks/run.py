@@ -18,6 +18,7 @@ def main() -> None:
 
     from . import (
         bench_graph_scaling,
+        bench_grouped,
         bench_offline,
         bench_online_batch,
         bench_params,
@@ -28,6 +29,7 @@ def main() -> None:
 
     benches = [
         ("online_batch", bench_online_batch.run),
+        ("grouped", bench_grouped.run),
         ("fig8_pruning", bench_pruning.run),
         ("fig9_baselines", bench_vs_baselines.run),
         ("fig7_params", bench_params.run),

@@ -2,7 +2,6 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 from repro.core import GnnPeConfig, GnnPeEngine, TrainConfig, vf2_match
 from repro.graphs import newman_watts_strogatz, random_connected_query

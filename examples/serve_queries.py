@@ -23,16 +23,29 @@ def main():
     ap.add_argument("--requests", type=int, default=60)
     ap.add_argument("--batch", type=int, default=6)
     ap.add_argument("--verify-every", type=int, default=10)
+    ap.add_argument(
+        "--index-kind", choices=["path", "grouped"], default="grouped",
+        help="probe layer: per-path leaf scan, or the GNN-PGE two-level group probe",
+    )
+    ap.add_argument("--group-size", type=int, default=16)
     args = ap.parse_args()
 
     g = newman_watts_strogatz(args.n, k=4, p=0.1, n_labels=50, seed=0)
     print(f"[offline] building index over |V|={g.n_vertices} |E|={g.n_edges} ...")
     t0 = time.perf_counter()
     engine = GnnPeEngine(
-        GnnPeConfig(encoder="monotone", n_partitions=max(args.n // 1000, 1), n_multi=2)
+        GnnPeConfig(
+            encoder="monotone", n_partitions=max(args.n // 1000, 1), n_multi=2,
+            index_kind=args.index_kind, group_size=args.group_size,
+        )
     ).build(g)
+    grp = (
+        f", {engine.offline_stats['n_groups']} groups"
+        if args.index_kind == "grouped"
+        else ""
+    )
     print(f"[offline] done in {time.perf_counter()-t0:.1f}s "
-          f"({engine.offline_stats['n_paths']} paths, "
+          f"({engine.offline_stats['n_paths']} paths{grp}, "
           f"{engine.offline_stats['index_bytes']/1e6:.1f} MB index)")
 
     # request stream: mixed query sizes, fused into batches by MatchServer

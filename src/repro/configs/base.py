@@ -22,9 +22,6 @@ from jax.sharding import PartitionSpec as P
 
 from ..dist.sharding import DP, lm_param_specs, recsys_param_specs, replicated_specs
 from ..models import (
-    GNNConfig,
-    RecsysConfig,
-    TransformerConfig,
     dcn_forward,
     dcn_loss,
     decode_step,

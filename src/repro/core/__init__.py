@@ -1,12 +1,15 @@
 from .baselines import gql_match, match_count, quicksi_match, vf2_match
 from .encoder import EncoderConfig, GATEncoder, MonotoneEncoder, make_encoder
 from .engine import GnnPeConfig, GnnPeEngine, PartitionModel, QueryStats
+from .grouping import attach_groups, group_paths
 from .index import (
+    PackedGroupIndex,
     PackedIndex,
     build_index,
     query_index,
     query_index_batch,
     query_index_batch_multi,
+    reset_pair_counters,
 )
 from .matcher import join_candidates, match_from_candidates, refine
 from .paths import concat_path_embeddings, enumerate_paths
@@ -28,7 +31,11 @@ __all__ = [
     "train_dominance",
     "dominance_violations",
     "PackedIndex",
+    "PackedGroupIndex",
     "build_index",
+    "group_paths",
+    "attach_groups",
+    "reset_pair_counters",
     "query_index",
     "query_index_batch",
     "query_index_batch_multi",

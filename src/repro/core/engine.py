@@ -35,6 +35,7 @@ import numpy as np
 
 from ..graphs import Graph, Partitioning, expanded_partition, partition_graph
 from .encoder import EncoderConfig, make_encoder
+from .grouping import attach_groups
 from .index import (
     PackedIndex,
     build_index,
@@ -64,6 +65,12 @@ class GnnPeConfig:
     heads: int = 3  # K = 3 (paper default)
     block_size: int = 128
     index_fanout: int = 16
+    # GNN-PGE: "path" probes leaf rows directly; "grouped" adds the
+    # path-group sidecar and the two-level probe (group-MBR scan first,
+    # member scan on surviving groups) — identical match sets, fewer
+    # leaf-level dominance comparisons (see core/grouping.py)
+    index_kind: str = "path"
+    group_size: int = 16  # max paths bundled per group ("grouped" only)
     plan_strategy: str = "aip"
     plan_weight: str = "deg"
     induced: bool = False
@@ -131,6 +138,10 @@ class GnnPeEngine:
     # ------------------------------------------------------------------
     def build(self, g: Graph) -> "GnnPeEngine":
         cfg = self.cfg
+        if cfg.index_kind not in ("path", "grouped"):
+            raise ValueError(
+                f"unknown index_kind {cfg.index_kind!r}; use 'path' or 'grouped'"
+            )
         t0 = time.perf_counter()
         self.graph = g
         self.n_labels = int(g.labels.max()) + 1 if g.n_vertices else 1
@@ -204,6 +215,8 @@ class GnnPeEngine:
                 quantize=cfg.quantize_index,
                 path_labels=g.labels[paths] if cfg.quantize_index else None,
             )
+            if cfg.index_kind == "grouped":
+                attach_groups(index, cfg.group_size)
             index_time += time.perf_counter() - t3
             self.models.append(
                 PartitionModel(
@@ -227,6 +240,12 @@ class GnnPeEngine:
             "index_time": index_time,
             "n_paths": int(sum(m.index.n_paths for m in self.models)),
             "index_bytes": int(sum(m.index.nbytes() for m in self.models)),
+            "n_groups": int(
+                sum(m.index.groups.n_groups for m in self.models if m.index.groups)
+            ),
+            "group_bytes": int(
+                sum(m.index.groups.nbytes() for m in self.models if m.index.groups)
+            ),
             "edge_cut": int(self.partitioning.edge_cut(g)),
         }
         return self
@@ -473,7 +492,15 @@ class GnnPeEngine:
         ]
         return cat, spans
 
-    def _probe_batch(self, requests: list, queries: list, q_embs, memo: dict) -> None:
+    def _probe_batch(
+        self,
+        requests: list,
+        queries: list,
+        q_embs,
+        memo: dict,
+        use_groups: bool = False,
+        stats_memo: dict | None = None,
+    ) -> None:
         """One fused index probe for many (query, path) pairs × partitions.
 
         ``requests`` is a list of (qi, path) pairs; results land in
@@ -482,6 +509,11 @@ class GnnPeEngine:
         hence one Pallas leaf scan) covering every partition.  Probe
         embeddings assemble as a single gather over the concatenated
         query-star embeddings (no per-request Python loop).
+
+        ``use_groups`` routes the probe through the GNN-PGE two-level
+        scan; when ``stats_memo`` is given, per-probe traversal stats
+        land in ``stats_memo[(mi, qi, path)]`` (the grouped cost model
+        reads ``surviving_groups`` from there).
         """
         cfg = self.cfg
         cat, spans = q_embs
@@ -526,12 +558,20 @@ class GnnPeEngine:
             if cfg.use_pallas_scan is not None
             else jax.default_backend() == "tpu"
         )
-        results = query_index_batch_multi(items, use_pallas=use_pallas)
-        for (mi, sel), rows_list in zip(sels, results):
+        out = query_index_batch_multi(
+            items,
+            use_pallas=use_pallas,
+            use_groups=use_groups,
+            return_stats=stats_memo is not None,
+        )
+        results, stats = out if stats_memo is not None else (out, None)
+        for ii, ((mi, sel), rows_list) in enumerate(zip(sels, results)):
             for b, (qi, p) in enumerate(sel):
                 memo[(mi, qi, p)] = rows_list[b]
+                if stats_memo is not None:
+                    stats_memo[(mi, qi, p)] = stats[ii][b]
 
-    def match_many(self, queries: list, return_stats: bool = False):
+    def match_many(self, queries: list, return_stats: bool = False, index_kind: str | None = None):
         """Exact subgraph matching for a batch of queries (fused Alg. 3).
 
         Per-query results are identical to ``match(q, impl="scalar")``;
@@ -539,9 +579,17 @@ class GnnPeEngine:
         whole batch (shared star embedding, batched traversal, one
         Pallas leaf scan).  ``plan_weight="dr"`` cost-model probes join
         the same batch and are reused by retrieval.
+
+        ``index_kind`` overrides ``cfg.index_kind`` for the probe layer:
+        a "grouped" engine keeps its per-path arrays, so both probe
+        kinds stay available for cross-checks and benchmarks.
         """
         assert self.graph is not None, "call build() first"
         cfg = self.cfg
+        kind = index_kind or cfg.index_kind
+        if kind not in ("path", "grouped"):
+            raise ValueError(f"unknown index_kind {kind!r}; use 'path' or 'grouped'")
+        use_groups = kind == "grouped"
         nq = len(queries)
         if nq == 0:
             return ([], []) if return_stats else []
@@ -552,25 +600,53 @@ class GnnPeEngine:
         n_models = len(self.models)
         # ---- plans (dr probes ride the same batched pipeline) -----------
         weight_fns: list = [None] * nq
+        plan_group_size = 1
         if cfg.plan_weight == "dr":
             probe_reqs = [
                 (qi, p)
                 for qi, q in enumerate(queries)
                 for p in candidate_plan_paths(q, cfg.path_length)
             ]
-            self._probe_batch(probe_reqs, queries, q_embs, memo)
+            stats_memo: dict | None = {} if use_groups else None
+            self._probe_batch(
+                probe_reqs, queries, q_embs, memo,
+                use_groups=use_groups, stats_memo=stats_memo,
+            )
 
-            def make_weight_fn(qi):
-                def weight_fn(p):
-                    return float(
-                        sum(
-                            memo[(mi, qi, p)].size
-                            for mi in range(n_models)
-                            if (mi, qi, p) in memo
+            if use_groups:
+                # grouped cost model: weights are group fan-outs
+                # (surviving groups — the probe's unit of leaf work)
+                # instead of the per-path |DR(o(p_q))| counts the
+                # two-level probe avoids materializing; plan_query's
+                # group_size scale only converts the reported cost to
+                # leaf-row units (selection is scale-invariant)
+                plan_group_size = cfg.group_size
+
+                def make_weight_fn(qi):
+                    def weight_fn(p):
+                        return float(
+                            sum(
+                                stats_memo[(mi, qi, p)]["surviving_groups"]
+                                for mi in range(n_models)
+                                if (mi, qi, p) in stats_memo
+                            )
                         )
-                    )
 
-                return weight_fn
+                    return weight_fn
+
+            else:
+
+                def make_weight_fn(qi):
+                    def weight_fn(p):
+                        return float(
+                            sum(
+                                memo[(mi, qi, p)].size
+                                for mi in range(n_models)
+                                if (mi, qi, p) in memo
+                            )
+                        )
+
+                    return weight_fn
 
             weight_fns = [make_weight_fn(qi) for qi in range(nq)]
         plans = [
@@ -578,6 +654,7 @@ class GnnPeEngine:
                 q, cfg.path_length,
                 strategy=cfg.plan_strategy, weight=cfg.plan_weight,
                 weight_fn=weight_fns[qi], seed=cfg.seed,
+                group_size=plan_group_size,
             )
             for qi, q in enumerate(queries)
         ]
@@ -589,7 +666,7 @@ class GnnPeEngine:
             if not any((mi, qi, p) in memo for mi in range(n_models))
         ]
         if todo:
-            self._probe_batch(todo, queries, q_embs, memo)
+            self._probe_batch(todo, queries, q_embs, memo, use_groups=use_groups)
         filter_time = time.perf_counter() - t0
         # ---- per-query candidate assembly + join + refine ---------------
         results = []

@@ -34,6 +34,14 @@ whole online filter for a *batch* of Q query paths at once:
 
 The scalar ``query_index`` is retained unchanged as the exactness
 cross-check and benchmark baseline.
+
+GNN-PGE two-level probe (§Perf E — this PR): with the
+``PackedGroupIndex`` sidecar (core/grouping.py) attached,
+``use_groups=True`` inserts a *group* level between the block descent
+and the leaf scan — surviving blocks expand to their path groups, ONE
+fused scan checks every (query, group) MBR pair, and only members of
+surviving groups reach the exact leaf predicates.  Same match sets,
+measurably fewer leaf-level dominance comparisons (``PAIR_COUNTERS``).
 """
 from __future__ import annotations
 
@@ -43,17 +51,31 @@ import numpy as np
 
 __all__ = [
     "PackedIndex",
+    "PackedGroupIndex",
     "build_index",
     "query_index",
     "query_index_batch",
     "query_index_batch_multi",
     "leaf_scan",
     "leaf_scan_batch",
+    "reset_pair_counters",
 ]
 
 # incremented on every fused Pallas leaf scan — lets integration tests prove
 # the kernel runs on the engine's real query path (not just in kernel tests)
 PALLAS_SCAN_CALLS = 0
+
+# (query, row) / (query, group) pairs issued by the batched probes since the
+# last reset — benchmarks/CI use these to prove the two-level grouped probe
+# issues measurably fewer leaf-level dominance comparisons (BENCH_grouped.json)
+PAIR_COUNTERS = {"leaf_pairs": 0, "group_pairs": 0}
+
+
+def reset_pair_counters() -> dict:
+    """Zero the probe pair counters; returns the dict (mutated in place)."""
+    PAIR_COUNTERS["leaf_pairs"] = 0
+    PAIR_COUNTERS["group_pairs"] = 0
+    return PAIR_COUNTERS
 
 
 def _morton_key(x: np.ndarray, bits: int = 8) -> np.ndarray:
@@ -106,6 +128,59 @@ def hash_labels(paths_labels: np.ndarray) -> np.ndarray:
 
 
 @dataclasses.dataclass
+class PackedGroupIndex:
+    """GNN-PGE sidecar: contiguous path bundles + per-group pruning bounds.
+
+    Paths are already (label-embedding, Morton)-sorted by ``build_index``;
+    a *group* is a contiguous run of ≤ ``group_size`` rows that never
+    crosses a leaf-block boundary, so each leaf block owns an integral set
+    of groups and the block-level descent composes with the group level.
+    The sort *tends* to make groups label-homogeneous, but a group may
+    straddle a label run — the probe therefore checks o₀(p_q) against the
+    group's MBR₀ *interval* (never equality), keeping pruning sound for
+    any group composition.  One dominance check against a group's upper
+    bound (Lemma 4.4 at group granularity) prunes the whole bundle with
+    no false dismissals; only members of surviving groups reach the
+    leaf-level exact scan (see ``query_index_batch_multi(use_groups=True)``).
+
+    Dominance pruning is one-sided (q ⪯ max), so only the upper bound is
+    stored for the dominance embeddings; MBR₀ needs both ends for the
+    containment test.
+    """
+
+    group_start: np.ndarray  # (G+1,) int64 row offsets in the sorted order
+    mbr_hi: np.ndarray  # (G, Dcat) upper bound over concat(main, multi-GNN) embeddings
+    mbr0: np.ndarray  # (G, D0, 2) lo/hi over the label embeddings o₀
+    block_group_start: np.ndarray  # (n_blocks+1,) int64 — groups per leaf block
+    group_size: int  # configured max members per group
+
+    @property
+    def n_groups(self) -> int:
+        return int(self.group_start.shape[0]) - 1
+
+    def member_counts(self) -> np.ndarray:
+        return np.diff(self.group_start)
+
+    def nbytes(self) -> int:
+        return int(
+            self.group_start.nbytes
+            + self.mbr_hi.nbytes
+            + self.mbr0.nbytes
+            + self.block_group_start.nbytes
+        )
+
+    def stats(self) -> dict:
+        counts = self.member_counts()
+        return {
+            "n_groups": self.n_groups,
+            "group_size": int(self.group_size),
+            "mean_members": float(counts.mean()) if counts.size else 0.0,
+            "max_members": int(counts.max()) if counts.size else 0,
+            "group_bytes": self.nbytes(),
+        }
+
+
+@dataclasses.dataclass
 class PackedIndex:
     """Per-partition index over paths of one length."""
 
@@ -122,6 +197,8 @@ class PackedIndex:
     # exact check on pre-filter survivors (see tests/test_quantized_index.py)
     emb_q: np.ndarray | None = None  # (P, D·(1+n)) int8, concat main+multi
     label_hash: np.ndarray | None = None  # (P,) int64
+    # GNN-PGE group sidecar (core/grouping.py attaches it); None = per-path only
+    groups: PackedGroupIndex | None = None
 
     @property
     def n_paths(self) -> int:
@@ -136,6 +213,8 @@ class PackedIndex:
             total += self.emb_q.nbytes
         if self.label_hash is not None:
             total += self.label_hash.nbytes
+        if self.groups is not None:
+            total += self.groups.nbytes()
         return total
 
 
@@ -391,6 +470,19 @@ def _descend_batch(index: PackedIndex, q_emb, q_emb0, q_multi, eps: float):
     return cand, alive
 
 
+def _prefilter_pairs(index: PackedIndex, rows, q_ids, q_emb, q_multi, q_label_hash):
+    """§Perf C1/C2 conservative int8 + label-hash pre-filter on (q, row) pairs."""
+    if index.emb_q is None or rows.size == 0:
+        return rows, q_ids
+    n_gnn = q_multi.shape[0]
+    qcat = np.concatenate([q_emb] + [q_multi[i] for i in range(n_gnn)], axis=1)
+    qq = quantize_query(qcat)
+    pre = np.all(qq[q_ids] <= index.emb_q[rows], axis=1)
+    if index.label_hash is not None and q_label_hash is not None:
+        pre &= index.label_hash[rows] == np.asarray(q_label_hash)[q_ids]
+    return rows[pre], q_ids[pre]
+
+
 def _pack_leaf_pairs(
     index: PackedIndex,
     cand: np.ndarray,
@@ -411,18 +503,11 @@ def _pack_leaf_pairs(
         return np.zeros((0,), np.int64), np.zeros((0,), np.int64)
     row_mat = cand[ci_pair][:, None] * bs + np.arange(bs)[None, :]
     valid = row_mat < index.n_paths
-    rows = row_mat[valid]
-    q_ids = np.repeat(qi_pair, bs).reshape(-1, bs)[valid]
-    if index.emb_q is not None:
-        n_gnn = q_multi.shape[0]
-        qcat = np.concatenate([q_emb] + [q_multi[i] for i in range(n_gnn)], axis=1)
-        qq = quantize_query(qcat)
-        pre = np.all(qq[q_ids] <= index.emb_q[rows], axis=1)
-        if index.label_hash is not None and q_label_hash is not None:
-            pre &= index.label_hash[rows] == np.asarray(q_label_hash)[q_ids]
-        rows = rows[pre]
-        q_ids = q_ids[pre]
-    return rows.astype(np.int64), q_ids.astype(np.int64)
+    rows = row_mat[valid].astype(np.int64)
+    q_ids = np.repeat(qi_pair, bs).reshape(-1, bs)[valid].astype(np.int64)
+    PAIR_COUNTERS["leaf_pairs"] += int(rows.size)
+    rows, q_ids = _prefilter_pairs(index, rows, q_ids, q_emb, q_multi, q_label_hash)
+    return rows, q_ids
 
 
 def _gather_pair_operands(index: PackedIndex, rows, q_ids, q_emb, q_emb0, q_multi):
@@ -483,6 +568,209 @@ def _split_rows(rows, q_ids, keep, Q: int) -> list:
     return np.split(rows.astype(np.int64), np.cumsum(counts)[:-1])
 
 
+# --------------------------------------------------------------------------
+# GNN-PGE two-level probe: group-bound scan → member scan (surviving groups)
+# --------------------------------------------------------------------------
+
+
+def _expand_segments(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Concatenate the ranges [starts[i], starts[i]+counts[i]) — vectorized."""
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros((0,), np.int64)
+    ends = np.cumsum(counts)
+    within = np.arange(total, dtype=np.int64) - np.repeat(ends - counts, counts)
+    return np.repeat(starts, counts).astype(np.int64) + within
+
+
+def _pack_group_pairs(groups: PackedGroupIndex, cand: np.ndarray, alive: np.ndarray):
+    """(query, block) survivors → packed (g_ids, q_ids) group pairs.
+
+    Groups nest inside leaf blocks (``block_group_start``), so each
+    surviving (query, block) cell expands to exactly that block's groups;
+    qi-major order is preserved for the downstream bincount/split.
+    """
+    qi_pair, ci_pair = np.nonzero(alive)  # qi-major order
+    if qi_pair.size == 0:
+        return np.zeros((0,), np.int64), np.zeros((0,), np.int64)
+    blk = cand[ci_pair]
+    bgs = groups.block_group_start
+    counts = bgs[blk + 1] - bgs[blk]
+    g_ids = _expand_segments(bgs[blk], counts)
+    q_ids = np.repeat(qi_pair, counts).astype(np.int64)
+    return g_ids, q_ids
+
+
+def _gather_group_operands(groups: PackedGroupIndex, g_ids, q_ids, q_emb, q_emb0, q_multi):
+    """Row-aligned group-level operands for packed (query, group) pairs."""
+    n_gnn = q_multi.shape[0]
+    q_cat = (
+        np.concatenate([q_emb] + [q_multi[i] for i in range(n_gnn)], axis=1)
+        if n_gnn
+        else q_emb
+    )
+    return (
+        q_cat[q_ids],
+        q_emb0[q_ids],
+        groups.mbr_hi[g_ids],  # dominance upper bounds (Lemma 4.4 per group)
+        groups.mbr0[g_ids, :, 0],  # label MBR₀ lower
+        groups.mbr0[g_ids, :, 1],  # label MBR₀ upper
+    )
+
+
+def _groups_keep_mask(qg, q0g, hi, lo0, hi0, eps: float, use_pallas: bool) -> np.ndarray:
+    """Group-level verdict: q ⪯ MBR_max  ∧  o₀(p_q) ∈ MBR₀ (eps-widened).
+
+    Conservative by construction: any member passing the exact leaf
+    predicates forces its group to pass here, so no false dismissals.
+    """
+    if qg.shape[0] == 0:
+        return np.zeros((0,), bool)
+    if use_pallas:
+        from ..kernels.dominance_scan.ops import dominance_scan_groups
+
+        global PALLAS_SCAN_CALLS
+        PALLAS_SCAN_CALLS += 1
+        return np.asarray(dominance_scan_groups(qg, q0g, hi, lo0, hi0, eps=eps)).astype(bool)
+    keep = np.all(qg <= hi + eps, axis=1)
+    keep &= np.all(q0g <= hi0 + eps, axis=1)
+    keep &= np.all(q0g >= lo0 - eps, axis=1)
+    return keep
+
+
+def _query_index_batch_multi_grouped(items, eps, return_stats, use_pallas):
+    """GNN-PGE two-level probe over several partitions (``use_groups=True``).
+
+    Level-synchronous block descent is shared with the per-path probe;
+    then:
+
+      1. group level — surviving blocks expand to their groups, and ONE
+         fused ``dominance_scan_groups`` call (per-partition pairs
+         concatenated) checks every (query, group) MBR pair;
+      2. member level — packed (query, group, member) offsets expand only
+         the surviving groups' rows, which run the existing exact pair
+         scan (int8 pre-filter + one fused ``dominance_scan_pairs``).
+
+    Returns exactly the rows of the per-path probe (group pruning is
+    sound and the member predicates are unchanged), touching far fewer
+    leaf pairs (``PAIR_COUNTERS``).
+    """
+    packs = []
+    for index, q_emb, q_emb0, q_multi, q_label_hash in items:
+        q_emb = np.asarray(q_emb, np.float32)
+        q_emb0 = np.asarray(q_emb0, np.float32)
+        Q = q_emb.shape[0]
+        if q_multi is None:
+            q_multi = np.zeros((index.emb_multi.shape[0], Q, q_emb.shape[1]), np.float32)
+        if index.n_paths == 0 or Q == 0:
+            packs.append({"Q": Q, "empty": True})
+            continue
+        if index.groups is None:
+            raise ValueError(
+                "use_groups=True needs the PackedGroupIndex sidecar — "
+                "run core.grouping.attach_groups(index, group_size) first"
+            )
+        cand, alive = _descend_batch(index, q_emb, q_emb0, q_multi, eps)
+        g_ids, q_ids_g = _pack_group_pairs(index.groups, cand, alive)
+        PAIR_COUNTERS["group_pairs"] += int(g_ids.size)
+        packs.append(
+            {
+                "Q": Q, "empty": False, "alive": alive, "index": index,
+                "g_ids": g_ids, "q_ids_g": q_ids_g, "bs": index.block_size,
+                "query": (q_emb, q_emb0, q_multi, q_label_hash),
+                "g_ops": _gather_group_operands(
+                    index.groups, g_ids, q_ids_g, q_emb, q_emb0, q_multi
+                ),
+            }
+        )
+    # ---- level 1: one fused group-bound scan across every partition ------
+    live = [p for p in packs if not p["empty"] and p["g_ids"].size]
+    if use_pallas and live:
+        cat = [np.concatenate([p["g_ops"][k] for p in live]) for k in range(5)]
+        keep_all = _groups_keep_mask(*cat, eps, use_pallas=True)
+        offs = np.cumsum([0] + [p["g_ids"].size for p in live])
+        for p, a, b in zip(live, offs[:-1], offs[1:]):
+            p["g_keep"] = keep_all[a:b]
+    else:
+        for p in live:
+            p["g_keep"] = _groups_keep_mask(*p["g_ops"], eps, use_pallas=False)
+    # ---- level 2: member rows of surviving groups only -------------------
+    for p in packs:
+        if p["empty"]:
+            continue
+        index = p["index"]
+        q_emb, q_emb0, q_multi, q_label_hash = p["query"]
+        Q = p["Q"]
+        g_keep = p.get("g_keep", np.zeros((0,), bool))
+        g_surv = p["g_ids"][g_keep]
+        q_surv = p["q_ids_g"][g_keep]
+        gs = index.groups.group_start
+        counts = gs[g_surv + 1] - gs[g_surv]
+        rows = _expand_segments(gs[g_surv], counts)
+        q_ids = np.repeat(q_surv, counts).astype(np.int64)
+        PAIR_COUNTERS["leaf_pairs"] += int(rows.size)
+        p["checked_groups"] = np.bincount(p["q_ids_g"], minlength=Q)
+        p["surviving_groups"] = np.bincount(q_surv, minlength=Q)
+        p["member_rows"] = np.bincount(q_ids, minlength=Q)
+        rows, q_ids = _prefilter_pairs(index, rows, q_ids, q_emb, q_multi, q_label_hash)
+        p["rows"], p["q_ids"] = rows, q_ids
+        if use_pallas:
+            p["ops"] = _gather_pair_operands(index, rows, q_ids, q_emb, q_emb0, q_multi)
+        else:
+            p["keep"] = _pairs_keep_mask_numpy_lazy(
+                index, rows, q_ids, q_emb, q_emb0, q_multi, eps
+            )
+    if use_pallas:
+        # one fused exact member scan across every partition's pairs
+        live = [p for p in packs if not p["empty"] and p["rows"].size]
+        if live:
+            qg = np.concatenate([p["ops"][0] for p in live])
+            q0g = np.concatenate([p["ops"][1] for p in live])
+            eg = np.concatenate([p["ops"][2] for p in live])
+            e0g = np.concatenate([p["ops"][3] for p in live])
+            keep_all = _pairs_keep_mask(qg, q0g, eg, e0g, eps, use_pallas=True)
+            offs = np.cumsum([0] + [p["rows"].size for p in live])
+            for p, a, b in zip(live, offs[:-1], offs[1:]):
+                p["keep"] = keep_all[a:b]
+    results = []
+    stats = [] if return_stats else None
+    for p in packs:
+        Q = p["Q"]
+        if p["empty"]:
+            results.append([np.zeros((0,), np.int64) for _ in range(Q)])
+            if return_stats:
+                stats.append(
+                    [
+                        {
+                            "scanned_blocks": 0, "scanned_groups": 0,
+                            "surviving_groups": 0, "scanned_paths": 0,
+                        }
+                        for _ in range(Q)
+                    ]
+                )
+            continue
+        keep = p.get("keep")
+        if keep is None:  # pallas mode with zero pairs
+            keep = np.zeros((0,), bool)
+        results.append(_split_rows(p["rows"], p["q_ids"], keep, Q))
+        if return_stats:
+            scanned = np.asarray(p["alive"].sum(axis=1))
+            stats.append(
+                [
+                    {
+                        "scanned_blocks": int(scanned[qi]),
+                        "scanned_groups": int(p["checked_groups"][qi]),
+                        "surviving_groups": int(p["surviving_groups"][qi]),
+                        "scanned_paths": int(p["member_rows"][qi]),
+                    }
+                    for qi in range(Q)
+                ]
+            )
+    if return_stats:
+        return results, stats
+    return results
+
+
 def leaf_scan_batch(
     index: PackedIndex,
     block_ids: np.ndarray,  # (C,) union of candidate leaf blocks
@@ -523,6 +811,7 @@ def query_index_batch(
     return_stats: bool = False,
     q_label_hash: np.ndarray | None = None,  # (Q,) int64
     use_pallas: bool = True,
+    use_groups: bool = False,
 ):
     """Alg. 3 traversal for a BATCH of query paths — one pass per level.
 
@@ -532,6 +821,9 @@ def query_index_batch(
     one fused kernel call (see ``leaf_scan_batch``).  Per-query results
     are identical to Q separate ``query_index`` calls.
 
+    ``use_groups=True`` routes through the GNN-PGE two-level probe
+    (requires the ``PackedGroupIndex`` sidecar); row sets are identical.
+
     Returns a list of Q int64 row arrays (and per-query stats dicts when
     ``return_stats``).
     """
@@ -540,6 +832,7 @@ def query_index_batch(
         eps=eps,
         return_stats=return_stats,
         use_pallas=use_pallas,
+        use_groups=use_groups,
     )
     if return_stats:
         return out[0][0], out[1][0]
@@ -551,6 +844,7 @@ def query_index_batch_multi(
     eps: float = 1e-6,
     return_stats: bool = False,
     use_pallas: bool = True,
+    use_groups: bool = False,
 ):
     """Batched traversal over SEVERAL indexes (partitions) at once.
 
@@ -563,7 +857,13 @@ def query_index_batch_multi(
     multi-partition probe.  Returns a list (per item) of lists (per
     query) of row arrays; with ``return_stats``, also per-item per-query
     stats dicts.
+
+    ``use_groups=True`` runs the GNN-PGE two-level probe instead
+    (group-bound scan, then member scan on surviving groups) — same row
+    sets, far fewer leaf pairs; every index needs the group sidecar.
     """
+    if use_groups:
+        return _query_index_batch_multi_grouped(items, eps, return_stats, use_pallas)
     packs = []
     for index, q_emb, q_emb0, q_multi, q_label_hash in items:
         q_emb = np.asarray(q_emb, np.float32)

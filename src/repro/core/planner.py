@@ -64,8 +64,19 @@ def plan_query(
     weight_fn: Callable[[tuple[int, ...]], float] | None = None,
     epsilon: int = 2,
     seed: int = 0,
+    group_size: int = 1,
 ) -> QueryPlan:
-    """Alg. 4. Returns the best covering path set under the cost model."""
+    """Alg. 4. Returns the best covering path set under the cost model.
+
+    For a GNN-PGE grouped index the ``dr`` ``weight_fn`` returns group
+    fan-outs (surviving groups — the probe's actual unit of leaf work)
+    instead of per-path candidate counts, which the grouped probe never
+    materializes.  ``group_size`` then rescales those fan-outs to
+    leaf-row units so the reported ``QueryPlan.cost`` stays comparable
+    across index kinds; being a uniform positive scale it deliberately
+    cannot change which plan is selected — the selection change comes
+    from the fan-out weights themselves.
+    """
     paths = candidate_plan_paths(q, length)
     deg = q.degrees
 
@@ -74,7 +85,8 @@ def plan_query(
             weight_fn = lambda p: -float(sum(deg[v] for v in p))  # noqa: E731
         else:
             raise ValueError("weight='dr' requires an explicit weight_fn (index probe)")
-    w = {p: weight_fn(p) for p in paths}
+    scale = float(group_size) if (weight == "dr" and group_size > 1) else 1.0
+    w = {p: scale * weight_fn(p) for p in paths}
 
     # line 2: highest-degree starting vertex
     start = int(np.argmax(deg))

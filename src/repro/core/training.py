@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .encoder import EncoderConfig, GATEncoder, MonotoneEncoder, make_encoder
+from .encoder import EncoderConfig, MonotoneEncoder, make_encoder
 from .stars import PairDataset, StarTensors
 
 __all__ = ["TrainConfig", "TrainResult", "train_dominance", "dominance_violations"]

@@ -10,7 +10,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = ["cross_interact_kernel", "cross_interact_pallas"]

@@ -23,7 +23,12 @@ from .kernel import (
     dominance_scan_pairs_pallas,
     dominance_scan_pallas,
 )
-from .ref import dominance_scan_batch_ref, dominance_scan_pairs_ref, dominance_scan_ref
+from .ref import (
+    dominance_scan_batch_ref,
+    dominance_scan_groups_ref,
+    dominance_scan_pairs_ref,
+    dominance_scan_ref,
+)
 
 __all__ = [
     "dominance_scan",
@@ -32,6 +37,8 @@ __all__ = [
     "dominance_scan_batch_ref",
     "dominance_scan_pairs",
     "dominance_scan_pairs_ref",
+    "dominance_scan_groups",
+    "dominance_scan_groups_ref",
 ]
 
 
@@ -172,3 +179,38 @@ def dominance_scan_pairs(
         qgp, q0gp, egp, e0gp, block_t=block_t, eps=eps, interpret=interpret
     )
     return mask[:T]
+
+
+def dominance_scan_groups(
+    qg,
+    q0g,
+    hi,
+    lo0,
+    hi0,
+    eps: float = 1e-6,
+    block_t: int = 2048,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+):
+    """Group-MBR probe (GNN-PGE level 1): qg,hi (T, D); q0g,lo0,hi0 (T, D0) → (T,).
+
+    keep[t] = all(qg[t] ≤ hi[t] + eps)                       (Lemma 4.4 per group)
+            ∧ all(lo0[t] − eps ≤ q0g[t] ≤ hi0[t] + eps)      (MBR₀ containment)
+
+    Runs as ONE fused ``dominance_scan_pairs`` call: the label-MBR
+    containment folds into the dominance compare by concatenating
+    (q0g, −q0g) against (hi0, −lo0) along features — q0 ≤ hi0 + eps and
+    −q0 ≤ −lo0 + eps together are exactly the eps-widened interval test,
+    so the existing pairs kernel family serves both probe levels.
+    """
+    T = qg.shape[0]
+    if T == 0:
+        return np.zeros((0,), np.int32)
+    q_cat = np.concatenate([qg, q0g, -q0g], axis=1).astype(np.float32)
+    e_cat = np.concatenate([hi, hi0, -lo0], axis=1).astype(np.float32)
+    zeros = np.zeros((T, 1), np.float32)  # label term vacuously true
+    if not use_pallas:
+        return dominance_scan_pairs_ref(q_cat, zeros, e_cat, zeros, eps)
+    return dominance_scan_pairs(
+        q_cat, zeros, e_cat, zeros, eps=eps, block_t=block_t, interpret=interpret
+    )

@@ -3,7 +3,12 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["dominance_scan_ref", "dominance_scan_batch_ref", "dominance_scan_pairs_ref"]
+__all__ = [
+    "dominance_scan_ref",
+    "dominance_scan_batch_ref",
+    "dominance_scan_pairs_ref",
+    "dominance_scan_groups_ref",
+]
 
 
 def dominance_scan_ref(q, q0, emb, emb0, eps: float = 1e-6):
@@ -23,4 +28,15 @@ def dominance_scan_pairs_ref(qg, q0g, eg, e0g, eps: float = 1e-6):
     """Row-aligned pairs: qg,eg (T, D); q0g,e0g (T, D0) → (T,) int32."""
     dom = jnp.all(qg <= eg + eps, axis=-1)
     lab = jnp.all(jnp.abs(e0g - q0g) <= eps, axis=-1)
+    return (dom & lab).astype(jnp.int32)
+
+
+def dominance_scan_groups_ref(qg, q0g, hi, lo0, hi0, eps: float = 1e-6):
+    """Row-aligned (query, group-MBR) pairs (GNN-PGE level-1 probe).
+
+    qg,hi (T, D); q0g,lo0,hi0 (T, D0) → (T,) int32: dominance against the
+    group upper bound AND label-embedding containment in [lo0, hi0].
+    """
+    dom = jnp.all(qg <= hi + eps, axis=-1)
+    lab = jnp.all((q0g <= hi0 + eps) & (q0g >= lo0 - eps), axis=-1)
     return (dom & lab).astype(jnp.int32)

@@ -20,7 +20,6 @@ skipped (resumable).
 """
 
 import argparse
-import dataclasses
 import json
 import subprocess
 import sys

@@ -14,7 +14,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..configs import build_step, get_arch, init_params, make_batch, opt_init, resolve_config

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from .gnn import GNNConfig, _gin_layer, _mlp_apply, _sage_layer
+from .gnn import GNNConfig, _mlp_apply
 
 __all__ = ["partition_gnn_loss", "build_partition_batch"]
 

@@ -21,6 +21,9 @@ __all__ = ["MatchServeConfig", "MatchServer"]
 @dataclasses.dataclass
 class MatchServeConfig:
     max_batch: int = 16  # queries fused per tick
+    # probe layer override per server ("path" | "grouped" | None = engine
+    # config) — lets one engine serve both kinds for A/B comparison
+    index_kind: str | None = None
 
 
 @dataclasses.dataclass
@@ -54,7 +57,9 @@ class MatchServer:
             return 0
         batch, self.queue = self.queue[: self.cfg.max_batch], self.queue[self.cfg.max_batch:]
         t_tick = time.perf_counter()
-        results = self.engine.match_many([r.query for r in batch])
+        results = self.engine.match_many(
+            [r.query for r in batch], index_kind=self.cfg.index_kind
+        )
         now = time.perf_counter()
         for r, matches in zip(batch, results):
             self.finished[r.request_id] = matches

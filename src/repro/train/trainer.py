@@ -17,7 +17,6 @@ import dataclasses
 import signal
 import statistics
 import time
-from pathlib import Path
 from typing import Callable
 
 import jax

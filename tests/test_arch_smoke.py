@@ -9,7 +9,6 @@ from repro.configs import (
     build_step,
     get_arch,
     init_params,
-    input_specs,
     list_archs,
     make_batch,
     opt_init,

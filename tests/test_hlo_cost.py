@@ -7,7 +7,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_cost import analyze_hlo, parse_shape_bytes
 

@@ -16,7 +16,7 @@ from repro.kernels.dominance_scan.ops import (
     dominance_scan_pairs_ref,
     dominance_scan_ref,
 )
-from repro.kernels.flash_attention.ops import flash_attention, flash_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.star_agg.ops import star_agg, star_agg_ref
 
 

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import GnnPeConfig, GnnPeEngine, TrainConfig, gql_match, quicksi_match, vf2_match
-from repro.graphs import erdos_renyi, newman_watts_strogatz, random_connected_query
+from repro.graphs import newman_watts_strogatz, random_connected_query
 
 
 @pytest.fixture(scope="module")

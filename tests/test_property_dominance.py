@@ -26,7 +26,7 @@ from repro.core import (
     plan_query,
     vf2_match,
 )
-from repro.graphs import erdos_renyi, from_edge_list, random_connected_query
+from repro.graphs import erdos_renyi, random_connected_query
 
 
 @st.composite
@@ -95,7 +95,6 @@ def test_path_enumeration_is_exactly_simple_paths(seed, n, length):
         for a, b in zip(row, row[1:]):
             assert g.has_edge(int(a), int(b))
     # brute-force recount on a subsample of start vertices
-    import itertools
 
     for v in range(min(n, 8)):
         def walks(prefix):

@@ -1,7 +1,6 @@
 """LM decode service: continuous batching, slot reuse, greedy parity."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import TransformerConfig, init_lm_params, lm_forward
 from repro.serve.engine import DecodeEngine, ServeConfig
