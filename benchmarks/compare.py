@@ -44,6 +44,14 @@ SPECS = {
         "higher_is_better": ["leaf_pair_ratio"],
         "bool_true": ["match_sets_identical", "fewer_leaf_comparisons"],
     },
+    # stacked/sharded probe vs the per-partition loop traversal; the
+    # multi-device scaling curve rides in the JSON but is not gated
+    # (virtual CPU devices share host cores — see bench_stacked.py)
+    "BENCH_stacked.json": {
+        "lower_is_better": ["stacked_total_s"],
+        "higher_is_better": ["speedup"],
+        "bool_true": ["match_sets_identical"],
+    },
 }
 DEFAULT_FILES = list(SPECS)
 

@@ -24,12 +24,14 @@ def main() -> None:
         bench_params,
         bench_pruning,
         bench_query_scaling,
+        bench_stacked,
         bench_vs_baselines,
     )
 
     benches = [
         ("online_batch", bench_online_batch.run),
         ("grouped", bench_grouped.run),
+        ("stacked", bench_stacked.run),
         ("fig8_pruning", bench_pruning.run),
         ("fig9_baselines", bench_vs_baselines.run),
         ("fig7_params", bench_params.run),

@@ -28,6 +28,11 @@ def main():
         help="probe layer: per-path leaf scan, or the GNN-PGE two-level group probe",
     )
     ap.add_argument("--group-size", type=int, default=16)
+    ap.add_argument(
+        "--probe-impl", choices=["loop", "stacked"], default="loop",
+        help="index traversal: per-partition Python loop, or the stacked-"
+        "tensor probe vmapped/sharded over the local devices",
+    )
     args = ap.parse_args()
 
     g = newman_watts_strogatz(args.n, k=4, p=0.1, n_labels=50, seed=0)
@@ -37,8 +42,17 @@ def main():
         GnnPeConfig(
             encoder="monotone", n_partitions=max(args.n // 1000, 1), n_multi=2,
             index_kind=args.index_kind, group_size=args.group_size,
+            probe_impl=args.probe_impl,
         )
     ).build(g)
+    if args.probe_impl == "stacked":
+        import jax
+
+        print(
+            f"[offline] stacked probe over {len(jax.devices())} device(s): "
+            f"{engine.offline_stats['stacked_bytes']/1e6:.1f} MB stacked tensors "
+            f"({engine.offline_stats['stacked_padding_frac']:.0%} padding)"
+        )
     grp = (
         f", {engine.offline_stats['n_groups']} groups"
         if args.index_kind == "grouped"

@@ -13,7 +13,8 @@ from .index import (
 )
 from .matcher import join_candidates, match_from_candidates, refine
 from .paths import concat_path_embeddings, enumerate_paths
-from .planner import QueryPlan, plan_query
+from .planner import QueryPlan, canonical_form, plan_query
+from .stacked import StackedIndex, build_stacked, plan_shards
 from .stars import build_pair_dataset, build_star_tensors, subset_table
 from .training import TrainConfig, TrainResult, dominance_violations, train_dominance
 
@@ -41,6 +42,10 @@ __all__ = [
     "query_index_batch_multi",
     "QueryPlan",
     "plan_query",
+    "canonical_form",
+    "StackedIndex",
+    "build_stacked",
+    "plan_shards",
     "enumerate_paths",
     "concat_path_embeddings",
     "build_star_tensors",

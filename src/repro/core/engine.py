@@ -45,11 +45,15 @@ from .index import (
 )
 from .matcher import match_from_candidates
 from .paths import concat_path_embeddings, enumerate_paths
-from .planner import QueryPlan, candidate_plan_paths, plan_query
+from .planner import QueryPlan, candidate_plan_paths, canonical_form, plan_query
 from .stars import build_pair_dataset, build_star_tensors
 from .training import TrainConfig, train_dominance
 
 __all__ = ["GnnPeConfig", "PartitionModel", "GnnPeEngine", "QueryStats"]
+
+# plan-cache bound: one QueryPlan per canonical query signature; FIFO
+# eviction keeps a long-lived MatchServer from growing without limit
+_PLAN_CACHE_MAX = 4096
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +80,11 @@ class GnnPeConfig:
     induced: bool = False
     quantize_index: bool = False  # §Perf C1/C2: int8 + label-hash leaf sidecar
     online_impl: str = "batched"  # "batched" (§Perf D) | "scalar" (baseline)
+    # index traversal: "loop" walks one PackedIndex per partition in
+    # Python; "stacked" probes the dense stacked-tensor index as one
+    # vmapped descent, shard_map'd over the local devices' ("part",)
+    # mesh (core/stacked.py + dist/probe.py) — identical match sets
+    probe_impl: str = "loop"
     # fused leaf scan backend: None = auto (Pallas kernel on TPU, the
     # bit-equal vectorized NumPy reference on CPU — interpret-mode Pallas
     # is an emulation, ~25× slower than XLA on the same work);
@@ -124,6 +133,8 @@ class GnnPeEngine:
         self.offline_stats: dict = {}
         self._encoder = None  # built once per (config, n_labels); see encoder
         self._stacked_cache = None  # per-partition params stacked for vmap
+        self._stacked_probe = None  # dist.probe.StackedProbe over the indexes
+        self._plan_cache: dict = {}  # canonical query key -> canonical QueryPlan
 
     @property
     def encoder(self):
@@ -141,6 +152,10 @@ class GnnPeEngine:
         if cfg.index_kind not in ("path", "grouped"):
             raise ValueError(
                 f"unknown index_kind {cfg.index_kind!r}; use 'path' or 'grouped'"
+            )
+        if cfg.probe_impl not in ("loop", "stacked"):
+            raise ValueError(
+                f"unknown probe_impl {cfg.probe_impl!r}; use 'loop' or 'stacked'"
             )
         t0 = time.perf_counter()
         self.graph = g
@@ -248,7 +263,22 @@ class GnnPeEngine:
             ),
             "edge_cut": int(self.partitioning.edge_cut(g)),
         }
+        self._stacked_probe = None  # indexes changed; restack lazily
+        if cfg.probe_impl == "stacked" and self.models:
+            self.stacked_probe()  # eager: pay stacking offline, report bytes
         return self
+
+    def stacked_probe(self):
+        """The dense stacked-tensor probe over every partition's index
+        (built lazily, cached until the next ``build``).  Stacking
+        padding overhead lands in ``offline_stats`` (``stacked_*``)."""
+        if self._stacked_probe is None:
+            assert self.models, "call build() first"
+            from ..dist.probe import StackedProbe  # lazy: avoids core↔dist cycle
+
+            self._stacked_probe = StackedProbe([m.index for m in self.models])
+            self.offline_stats.update(self._stacked_probe.stacked.padding_stats())
+        return self._stacked_probe
 
     def _encoder_cfg(self) -> EncoderConfig:
         cfg = self.cfg
@@ -325,16 +355,64 @@ class GnnPeEngine:
             o_multi[i] = oi
         return o, o0, o_multi
 
-    def match(self, q: Graph, return_stats: bool = False, impl: str | None = None):
+    def _plan_cached(
+        self, q: Graph, weight_fn=None, group_size: int = 1
+    ) -> QueryPlan:
+        """``plan_query`` with a canonical-signature cache (deg plans only).
+
+        Plans under the default ``weight="deg"`` cost model depend only
+        on the query's labeled structure, so repeated (even relabeled-
+        isomorphic) queries in ``match_many`` batches reuse one greedy
+        planner run: the plan is cached in canonical vertex ids keyed by
+        ``canonical_form``'s graph bytes and mapped back through each
+        query's own ordering.  ``dr`` plans weight by per-query index
+        probes and always re-plan.
+        """
+        cfg = self.cfg
+        if weight_fn is not None or cfg.plan_weight != "deg":
+            return plan_query(
+                q, cfg.path_length,
+                strategy=cfg.plan_strategy, weight=cfg.plan_weight,
+                weight_fn=weight_fn, seed=cfg.seed, group_size=group_size,
+            )
+        perm, key = canonical_form(q)
+        full_key = (key, cfg.path_length, cfg.plan_strategy, cfg.seed)
+        hit = self._plan_cache.get(full_key)
+        if hit is not None:
+            paths = [tuple(int(perm[v]) for v in p) for p in hit.paths]
+            return QueryPlan(paths=paths, cost=hit.cost, strategy=hit.strategy)
+        plan = plan_query(
+            q, cfg.path_length,
+            strategy=cfg.plan_strategy, weight="deg", seed=cfg.seed,
+        )
+        inv = np.empty(q.n_vertices, np.int64)
+        inv[perm] = np.arange(q.n_vertices)
+        while len(self._plan_cache) >= _PLAN_CACHE_MAX:
+            self._plan_cache.pop(next(iter(self._plan_cache)))
+        self._plan_cache[full_key] = QueryPlan(
+            paths=[tuple(int(inv[v]) for v in p) for p in plan.paths],
+            cost=plan.cost,
+            strategy=plan.strategy,
+        )
+        return plan
+
+    def match(
+        self,
+        q: Graph,
+        return_stats: bool = False,
+        impl: str | None = None,
+        probe_impl: str | None = None,
+    ):
         """Exact subgraph matching of query q (Alg. 3).
 
         ``impl`` overrides ``cfg.online_impl``: "batched" routes through
         ``match_many`` (the fused hot path); "scalar" runs the original
         per-(partition, path) loop (cross-check / benchmark baseline).
+        ``probe_impl`` selects the index traversal ("loop" | "stacked").
         """
         impl = impl or self.cfg.online_impl
         if impl == "batched":
-            out = self.match_many([q], return_stats=return_stats)
+            out = self.match_many([q], return_stats=return_stats, probe_impl=probe_impl)
             if return_stats:
                 matches, stats = out
                 return matches[0], stats[0]
@@ -385,14 +463,7 @@ class GnnPeEngine:
                     )
                 )
 
-        plan = plan_query(
-            q,
-            cfg.path_length,
-            strategy=cfg.plan_strategy,
-            weight=cfg.plan_weight,
-            weight_fn=weight_fn,
-            seed=cfg.seed,
-        )
+        plan = self._plan_cached(q, weight_fn=weight_fn)
         stats.plan = plan
         # candidate retrieval per partition, per query path
         candidates = [[] for _ in plan.paths]
@@ -500,6 +571,7 @@ class GnnPeEngine:
         memo: dict,
         use_groups: bool = False,
         stats_memo: dict | None = None,
+        probe_impl: str | None = None,
     ) -> None:
         """One fused index probe for many (query, path) pairs × partitions.
 
@@ -514,6 +586,11 @@ class GnnPeEngine:
         scan; when ``stats_memo`` is given, per-probe traversal stats
         land in ``stats_memo[(mi, qi, path)]`` (the grouped cost model
         reads ``surviving_groups`` from there).
+
+        ``probe_impl="stacked"`` traverses the dense stacked-tensor
+        index (one vmapped/sharded descent over ALL partitions,
+        dist/probe.py) instead of looping per-partition ``PackedIndex``
+        objects — memo entries are identical either way.
         """
         cfg = self.cfg
         cat, spans = q_embs
@@ -534,6 +611,43 @@ class GnnPeEngine:
                     all_labels = np.concatenate([q.labels for q in queries])
                 qh = hash_labels(all_labels[gidx])
             layouts[L] = (sel, gidx, qh)
+        use_pallas = (
+            cfg.use_pallas_scan
+            if cfg.use_pallas_scan is not None
+            else jax.default_backend() == "tpu"
+        )
+        impl = probe_impl or cfg.probe_impl
+        if impl == "stacked" and self.models:
+            # one vmapped (and device-sharded) descent over EVERY partition
+            probe = self.stacked_probe()
+            L = self.models[0].index.paths.shape[1]
+            if L not in layouts:
+                return
+            sel, gidx, qh = layouts[L]
+            B = len(sel)
+            m = len(self.models)
+            q_emb = np.stack([cat[mi][0][gidx].reshape(B, -1) for mi in range(m)])
+            q_emb0 = np.stack([cat[mi][1][gidx].reshape(B, -1) for mi in range(m)])
+            q_multi = (
+                np.stack(
+                    [cat[mi][2][:, gidx].reshape(cfg.n_multi, B, -1) for mi in range(m)],
+                    axis=1,
+                )
+                if cfg.n_multi
+                else None
+            )
+            out = probe.probe(
+                q_emb, q_emb0, q_multi, q_label_hash=qh,
+                use_groups=use_groups, use_pallas=use_pallas,
+                return_stats=stats_memo is not None,
+            )
+            results, stats = out if stats_memo is not None else (out, None)
+            for mi in range(m):
+                for b, (qi, p) in enumerate(sel):
+                    memo[(mi, qi, p)] = results[mi][b]
+                    if stats_memo is not None:
+                        stats_memo[(mi, qi, p)] = stats[mi][b]
+            return
         items = []
         sels = []
         for mi, model in enumerate(self.models):
@@ -553,11 +667,6 @@ class GnnPeEngine:
         if not items:
             return
         # one fused traversal + ONE fused leaf scan for every partition
-        use_pallas = (
-            cfg.use_pallas_scan
-            if cfg.use_pallas_scan is not None
-            else jax.default_backend() == "tpu"
-        )
         out = query_index_batch_multi(
             items,
             use_pallas=use_pallas,
@@ -571,7 +680,13 @@ class GnnPeEngine:
                 if stats_memo is not None:
                     stats_memo[(mi, qi, p)] = stats[ii][b]
 
-    def match_many(self, queries: list, return_stats: bool = False, index_kind: str | None = None):
+    def match_many(
+        self,
+        queries: list,
+        return_stats: bool = False,
+        index_kind: str | None = None,
+        probe_impl: str | None = None,
+    ):
         """Exact subgraph matching for a batch of queries (fused Alg. 3).
 
         Per-query results are identical to ``match(q, impl="scalar")``;
@@ -583,12 +698,17 @@ class GnnPeEngine:
         ``index_kind`` overrides ``cfg.index_kind`` for the probe layer:
         a "grouped" engine keeps its per-path arrays, so both probe
         kinds stay available for cross-checks and benchmarks.
+        ``probe_impl`` likewise overrides ``cfg.probe_impl`` ("loop" |
+        "stacked") — match sets are byte-identical between the two.
         """
         assert self.graph is not None, "call build() first"
         cfg = self.cfg
         kind = index_kind or cfg.index_kind
         if kind not in ("path", "grouped"):
             raise ValueError(f"unknown index_kind {kind!r}; use 'path' or 'grouped'")
+        impl = probe_impl or cfg.probe_impl
+        if impl not in ("loop", "stacked"):
+            raise ValueError(f"unknown probe_impl {impl!r}; use 'loop' or 'stacked'")
         use_groups = kind == "grouped"
         nq = len(queries)
         if nq == 0:
@@ -610,7 +730,7 @@ class GnnPeEngine:
             stats_memo: dict | None = {} if use_groups else None
             self._probe_batch(
                 probe_reqs, queries, q_embs, memo,
-                use_groups=use_groups, stats_memo=stats_memo,
+                use_groups=use_groups, stats_memo=stats_memo, probe_impl=impl,
             )
 
             if use_groups:
@@ -650,12 +770,7 @@ class GnnPeEngine:
 
             weight_fns = [make_weight_fn(qi) for qi in range(nq)]
         plans = [
-            plan_query(
-                q, cfg.path_length,
-                strategy=cfg.plan_strategy, weight=cfg.plan_weight,
-                weight_fn=weight_fns[qi], seed=cfg.seed,
-                group_size=plan_group_size,
-            )
+            self._plan_cached(q, weight_fn=weight_fns[qi], group_size=plan_group_size)
             for qi, q in enumerate(queries)
         ]
         # ---- retrieval: one fused probe per partition for all plans -----
@@ -666,7 +781,9 @@ class GnnPeEngine:
             if not any((mi, qi, p) in memo for mi in range(n_models))
         ]
         if todo:
-            self._probe_batch(todo, queries, q_embs, memo, use_groups=use_groups)
+            self._probe_batch(
+                todo, queries, q_embs, memo, use_groups=use_groups, probe_impl=impl
+            )
         filter_time = time.perf_counter() - t0
         # ---- per-query candidate assembly + join + refine ---------------
         results = []

@@ -16,11 +16,47 @@ from ..graphs import Graph
 __all__ = ["join_candidates", "refine", "match_from_candidates"]
 
 
+def _lex_keys(a: np.ndarray, n_values: int) -> np.ndarray:
+    """Rows → ONE sortable key array preserving lexicographic row order.
+
+    Bit-packs each row into a uint64 when ``cols · ceil(log2(n_values))``
+    fits (always at paper path lengths); wider rows reinterpret their
+    big-endian bytes as fixed-size void scalars, whose memcmp order is
+    still lexicographic for non-negative ints.  Every sort/merge/dedup
+    in the join then sorts one key column instead of lexsorting the row
+    columns, and key equality is exact row equality (no hash aliasing —
+    the old ``2³¹``-radix encode could wrap past 2 shared columns).
+    """
+    cols = a.shape[1]
+    bits = max(int(np.ceil(np.log2(max(n_values, 2)))), 1)
+    if cols * bits <= 63:
+        k = np.zeros(a.shape[0], np.uint64)
+        shift, mask = np.uint64(bits), np.uint64((1 << bits) - 1)
+        for j in range(cols):
+            k = (k << shift) | (a[:, j].astype(np.uint64) & mask)
+        return k
+    b = np.ascontiguousarray(a.astype(">i4"))
+    return b.view(np.dtype((np.void, 4 * cols))).ravel()
+
+
+def _unique_rows(a: np.ndarray, n_values: int) -> np.ndarray:
+    """``np.unique(a, axis=0)`` (same rows, same order) via one key sort."""
+    if a.shape[0] <= 1:
+        return a
+    keys = _lex_keys(a, n_values)
+    order = np.argsort(keys, kind="stable")
+    ks = keys[order]
+    keep = np.ones(ks.size, bool)
+    keep[1:] = ks[1:] != ks[:-1]
+    return a[order[keep]]
+
+
 def _join_pair(
     table: np.ndarray,
     table_cols: list[int],
     cand: np.ndarray,
     cand_cols: list[int],
+    n_values: int,
 ) -> tuple[np.ndarray, list[int]]:
     """Join a partial-assignment table with one path's candidate rows.
 
@@ -42,17 +78,9 @@ def _join_pair(
         r = np.repeat(np.arange(table.shape[0]), cand.shape[0])
         c = np.tile(np.arange(cand.shape[0]), table.shape[0])
     else:
-        # sort-merge join on the shared-column key
-        tkey = table[:, t_idx]
-        ckey = cand[:, c_idx]
-        # encode multi-column keys into a single int64 (vertex ids < 2^31)
-        def enc(a: np.ndarray) -> np.ndarray:
-            k = a[:, 0].astype(np.int64)
-            for j in range(1, a.shape[1]):
-                k = k * np.int64(2**31) + a[:, j].astype(np.int64)
-            return k
-
-        tk, ck = enc(tkey), enc(ckey)
+        # sort-merge join: pre-hashed single-key arrays (see _lex_keys)
+        tk = _lex_keys(table[:, t_idx], n_values)
+        ck = _lex_keys(cand[:, c_idx], n_values)
         order_t = np.argsort(tk, kind="stable")
         order_c = np.argsort(ck, kind="stable")
         tk_s, ck_s = tk[order_t], ck[order_c]
@@ -81,18 +109,25 @@ def _join_pair(
         merged = merged[ok]
     # dedup rows (different candidate paths can induce the same assignment)
     if merged.shape[0] > 1:
-        merged = np.unique(merged, axis=0)
+        merged = _unique_rows(merged, n_values)
     return merged.astype(np.int32), table_cols + new_cols
 
 
 def join_candidates(
     plan_paths: list,
     candidates: list,
+    n_values: int | None = None,
 ) -> tuple[np.ndarray, list[int]]:
-    """Multi-way join of per-path candidates (smallest-first order)."""
+    """Multi-way join of per-path candidates (smallest-first order).
+
+    ``n_values`` bounds the vertex ids (``g.n_vertices``) so join keys
+    bit-pack into uint64; derived from the data when omitted.
+    """
+    if n_values is None:
+        n_values = int(max((int(c.max()) + 1 for c in candidates if c.size), default=2))
     order = np.argsort([c.shape[0] for c in candidates], kind="stable")
     first = int(order[0])
-    table = np.unique(candidates[first], axis=0).astype(np.int32)
+    table = _unique_rows(candidates[first], n_values).astype(np.int32)
     cols = list(plan_paths[first])
     # a path may repeat no vertices (simple), so cols are distinct per path
     # injectivity inside one path row:
@@ -112,7 +147,7 @@ def join_candidates(
         if nxt is None:
             nxt = remaining[0]
         remaining.remove(nxt)
-        table, cols = _join_pair(table, cols, candidates[nxt], list(plan_paths[nxt]))
+        table, cols = _join_pair(table, cols, candidates[nxt], list(plan_paths[nxt]), n_values)
         if table.shape[0] == 0:
             break
     return table, cols
@@ -195,5 +230,5 @@ def match_from_candidates(
     candidates: list,
     induced: bool = False,
 ) -> list[tuple[int, ...]]:
-    table, cols = join_candidates(plan_paths, candidates)
+    table, cols = join_candidates(plan_paths, candidates, n_values=g.n_vertices)
     return refine(g, q, table, cols, induced=induced)

@@ -19,7 +19,7 @@ import numpy as np
 from ..graphs import Graph
 from .paths import enumerate_paths
 
-__all__ = ["QueryPlan", "plan_query", "candidate_plan_paths"]
+__all__ = ["QueryPlan", "plan_query", "candidate_plan_paths", "canonical_form"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +54,56 @@ def candidate_plan_paths(q: Graph, length: int) -> list:
         else:
             all_paths = np.arange(q.n_vertices, dtype=np.int32)[:, None]
     return [tuple(int(x) for x in row) for row in all_paths]
+
+
+def _dense_ranks(values: list) -> list:
+    """Map arbitrary comparable values to dense ints, order-preserving."""
+    lut = {v: i for i, v in enumerate(sorted(set(values)))}
+    return [lut[v] for v in values]
+
+
+def canonical_form(q: Graph) -> tuple[np.ndarray, bytes]:
+    """Deterministic label/degree canonical ordering for plan caching.
+
+    WL-style color refinement: start from (label, degree) colors and
+    iterate ``color ← (color, sorted neighbor colors)`` until the color
+    partition stabilizes; order vertices by (final color, original id).
+    Returns ``(perm, key)`` where ``perm[i]`` is the original vertex at
+    canonical position ``i`` and ``key`` byte-encodes the *relabeled*
+    graph (labels + edge list under the ordering).  Equal keys therefore
+    guarantee identical canonical graphs — a plan computed on one maps
+    to the other through its own ``perm`` — so a cache keyed on ``key``
+    is always sound; isomorphic queries that the refinement fails to
+    align just miss the cache.  Queries are tiny (≪ the data graph), so
+    the Python refinement loop is noise next to the greedy planner it
+    short-circuits.
+    """
+    n = q.n_vertices
+    if n == 0:
+        return np.zeros(0, np.int64), b"\x00"
+    nbrs = [list(map(int, q.neighbors(v))) for v in range(n)]
+    ranks = _dense_ranks([(int(q.labels[v]), len(nbrs[v])) for v in range(n)])
+    n_classes = len(set(ranks))
+    for _ in range(n):
+        sig = [(ranks[v], tuple(sorted(ranks[u] for u in nbrs[v]))) for v in range(n)]
+        ranks = _dense_ranks(sig)
+        new_classes = len(set(ranks))
+        if new_classes == n_classes:
+            break
+        n_classes = new_classes
+    perm = np.asarray(sorted(range(n), key=lambda v: (ranks[v], v)), np.int64)
+    inv = np.empty(n, np.int64)
+    inv[perm] = np.arange(n)
+    edges = sorted(
+        (min(int(inv[u]), int(inv[v])), max(int(inv[u]), int(inv[v])))
+        for u, v in q.edge_array()
+    )
+    key = (
+        np.asarray([n], np.int64).tobytes()
+        + q.labels[perm].astype(np.int64).tobytes()
+        + np.asarray(edges, np.int64).tobytes()
+    )
+    return perm, key
 
 
 def plan_query(

@@ -1,0 +1,406 @@
+"""Stacked-tensor partition index — dense (partitions, …) tensors for the
+vmapped / sharded probe (dist/probe.py).
+
+``query_index_batch_multi`` traverses one ``PackedIndex`` per partition in
+a Python loop: every partition pays its own level-descent numpy calls,
+pack/gather plumbing, and (off the fused kernel path) its own dispatch.
+The paper's scalability claim, and the distributed GNN-PE follow-up
+(load balancing / cache optimization / plan ranking), both hinge on
+traversing the *partition* axis in parallel — which on a JAX stack means
+one thing: every partition's index must live in the SAME dense tensors
+so ``jax.vmap`` can map the whole probe over a leading partition dim and
+``shard_map`` can split that dim over a device mesh.
+
+This module builds that representation.  All partitions already share
+the (label-lex, Morton) block layout of ``build_index`` — same
+``block_size``, ``fanout``, feature widths — they differ only in path
+count and therefore blocks-per-level and level count.  Stacking is
+pad-and-align:
+
+  * **levels** align at the LEAF end; partitions with fewer levels get
+    extra top levels synthesized by the same fanout roll-up the builder
+    uses (an ancestor MBR can only reject queries its children also
+    reject, so the dense descent stays mask-identical to the loop);
+  * per level, blocks pad to the widest partition with *reject*
+    sentinels (dominance hi = −inf, label lo/hi = +inf/−inf) that can
+    never pass a mask;
+  * only the probed bounds are stored: the dominance upper bounds of
+    (main ∥ multi-GNN) concatenate into one ``(S, B, Dcat)`` tensor per
+    level (Lemma 4.4 is one-sided), plus the MBR₀ lo/hi pair
+    (Lemma 4.3);
+  * **leaf payload** (exact embeddings, int8/label-hash sidecars) pads
+    to the widest partition's path count;
+  * the **group sidecar** re-tiles onto fixed slots — each leaf block
+    owns ``ceil(block_size/group_size)`` group slots, so the
+    block→group expansion in the probe is one ``repeat`` — with reject
+    bounds and zero member counts on unused slots;
+  * the partition dim itself is laid out by a greedy size-balanced
+    partition→shard assignment (``plan_shards``) and padded to a
+    multiple of the shard count, so ``shard_map`` splits it evenly and
+    every shard carries a near-equal number of paths.
+
+Padding is the price of density; ``padding_stats()`` reports it and the
+engine surfaces it in ``offline_stats`` (``stacked_*`` keys).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .index import PackedIndex
+
+__all__ = ["StackedIndex", "StackedGroups", "build_stacked", "plan_shards"]
+
+
+def _reject_level(nb: int, d_cat: int, d0: int):
+    """Level tensors no query can survive (pads blocks and filler slots)."""
+    return (
+        np.full((nb, d_cat), -np.inf, np.float32),  # dominance hi
+        np.full((nb, d0), np.inf, np.float32),  # label lo
+        np.full((nb, d0), -np.inf, np.float32),  # label hi
+    )
+
+
+def _level_bounds(level: dict) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One builder level → the probed bounds (hi_cat, lo0, hi0)."""
+    his = [level["mbr"][:, :, 1]]
+    his += [level["mbr_multi"][i][:, :, 1] for i in range(level["mbr_multi"].shape[0])]
+    return (
+        np.concatenate(his, axis=1).astype(np.float32),
+        level["mbr0"][:, :, 0].astype(np.float32),
+        level["mbr0"][:, :, 1].astype(np.float32),
+    )
+
+
+def _roll_up(hi, lo0, hi0, fanout: int):
+    """Synthesize a parent level: min/max over ``fanout`` children (same
+    math as ``build_index``'s roll, on the probed bounds only)."""
+    nb = hi.shape[0]
+    n_sup = (nb + fanout - 1) // fanout
+    pad = n_sup * fanout - nb
+
+    def agg(x, fill, red):
+        if pad:
+            x = np.concatenate([x, np.full((pad, x.shape[1]), fill, x.dtype)])
+        return red(x.reshape(n_sup, fanout, -1), axis=1)
+
+    return (
+        agg(hi, -np.inf, np.max),
+        agg(lo0, np.inf, np.min),
+        agg(hi0, -np.inf, np.max),
+    )
+
+
+def plan_shards(sizes: np.ndarray, n_shards: int) -> list[list[int]]:
+    """Greedy size-balanced partition→shard assignment (largest first onto
+    the least-loaded shard) — the distributed follow-up's load-balancing
+    step at its simplest.  Returns per-shard partition-id lists."""
+    order = np.argsort(np.asarray(sizes, np.int64), kind="stable")[::-1]
+    loads = np.zeros(n_shards, np.int64)
+    shards: list[list[int]] = [[] for _ in range(n_shards)]
+    for pid in order:
+        s = int(np.argmin(loads))
+        shards[s].append(int(pid))
+        loads[s] += int(sizes[pid])
+    return shards
+
+
+@dataclasses.dataclass
+class StackedGroups:
+    """Group sidecars re-tiled onto ``gpb`` fixed slots per leaf block."""
+
+    hi: np.ndarray  # (S, G, Dcat) dominance upper bounds
+    lo0: np.ndarray  # (S, G, D0)
+    hi0: np.ndarray  # (S, G, D0)
+    start: np.ndarray  # (S, G) int64 local row start (0 on unused slots)
+    count: np.ndarray  # (S, G) int64 member count (0 on unused slots)
+    gpb: int  # group slots per leaf block
+    group_size: int
+
+    def nbytes(self) -> int:
+        return int(
+            self.hi.nbytes + self.lo0.nbytes + self.hi0.nbytes
+            + self.start.nbytes + self.count.nbytes
+        )
+
+
+@dataclasses.dataclass
+class StackedIndex:
+    """All partitions' packed forests as dense (S, …) tensors.
+
+    ``S = n_slots`` ≥ ``n_parts``: partitions are permuted into shard-
+    balanced slots and padded with filler slots (all-reject bounds, zero
+    paths) up to a multiple of the shard count.  ``slot_of[i]`` maps
+    engine partition ``i`` to its slot.
+    """
+
+    n_parts: int
+    n_slots: int
+    n_shards: int
+    slot_of: np.ndarray  # (n_parts,) int64
+    n_paths: np.ndarray  # (S,) int64 — 0 on filler slots
+    block_size: int
+    fanout: int
+    n_gnn: int
+    # levels stored top → leaf; each entry (S, B_li, Dcat) / (S, B_li, D0)
+    level_hi: tuple
+    level_lo0: tuple
+    level_hi0: tuple
+    # leaf payload, padded to (S, P_max, …)
+    emb_cat: np.ndarray  # (S, P_max, Dcat) float32
+    emb0: np.ndarray  # (S, P_max, D0) float32
+    emb_q: np.ndarray | None  # (S, P_max, Dcat) int8
+    label_hash: np.ndarray | None  # (S, P_max) int64
+    groups: StackedGroups | None
+    real_bytes: int  # Σ source-index bytes covered by these tensors
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.level_hi)
+
+    @property
+    def n_leaf_blocks(self) -> int:
+        return int(self.level_hi[-1].shape[1]) if self.level_hi else 0
+
+    def nbytes(self) -> int:
+        total = self.emb_cat.nbytes + self.emb0.nbytes + self.n_paths.nbytes
+        for hi, lo0, hi0 in zip(self.level_hi, self.level_lo0, self.level_hi0):
+            total += hi.nbytes + lo0.nbytes + hi0.nbytes
+        if self.emb_q is not None:
+            total += self.emb_q.nbytes
+        if self.label_hash is not None:
+            total += self.label_hash.nbytes
+        if self.groups is not None:
+            total += self.groups.nbytes()
+        return int(total)
+
+    def padding_stats(self) -> dict:
+        """Stacking overhead: dense bytes vs the ragged bytes they cover."""
+        total = self.nbytes()
+        pad = max(total - self.real_bytes, 0)
+        return {
+            "stacked_bytes": total,
+            "stacked_real_bytes": int(self.real_bytes),
+            "stacked_padding_bytes": int(pad),
+            "stacked_padding_frac": pad / max(total, 1),
+        }
+
+
+def _slot_levels(index: PackedIndex, n_levels: int, fanout: int):
+    """One partition's probed level bounds, synthesized up to n_levels."""
+    levels = [_level_bounds(lv) for lv in index.levels]  # leaf → top
+    while len(levels) < n_levels:
+        levels.append(_roll_up(*levels[-1], fanout))
+    return levels[::-1]  # top → leaf
+
+
+def _stack_groups(
+    indexes: list, slot_of: np.ndarray, n_slots: int, n_leaf_blocks: int,
+    d_cat: int, d0: int,
+) -> StackedGroups | None:
+    live = [ix for ix in indexes if ix.n_paths]
+    if not live or any(ix.groups is None for ix in live):
+        return None
+    group_size = int(live[0].groups.group_size)
+    if any(int(ix.groups.group_size) != group_size for ix in live):
+        raise ValueError("stacked partitions must share group_size")
+    bs = live[0].block_size
+    gpb = (bs + group_size - 1) // group_size
+    G = n_leaf_blocks * gpb
+    hi = np.full((n_slots, G, d_cat), -np.inf, np.float32)
+    lo0 = np.full((n_slots, G, d0), np.inf, np.float32)
+    hi0 = np.full((n_slots, G, d0), -np.inf, np.float32)
+    start = np.zeros((n_slots, G), np.int64)
+    count = np.zeros((n_slots, G), np.int64)
+    for i, ix in enumerate(indexes):
+        if ix.n_paths == 0:
+            continue
+        g = ix.groups
+        s = int(slot_of[i])
+        bgs = g.block_group_start
+        per_block = np.diff(bgs)  # groups in each leaf block (≤ gpb)
+        blk = np.repeat(np.arange(per_block.shape[0], dtype=np.int64), per_block)
+        within = np.arange(blk.shape[0], dtype=np.int64) - np.repeat(bgs[:-1], per_block)
+        slots = blk * gpb + within  # slot of group k, in group-id order
+        hi[s, slots] = g.mbr_hi
+        lo0[s, slots] = g.mbr0[:, :, 0]
+        hi0[s, slots] = g.mbr0[:, :, 1]
+        start[s, slots] = g.group_start[:-1]
+        count[s, slots] = np.diff(g.group_start)
+    return StackedGroups(
+        hi=hi, lo0=lo0, hi0=hi0, start=start, count=count,
+        gpb=gpb, group_size=group_size,
+    )
+
+
+def build_stacked(indexes: list, n_shards: int = 1) -> StackedIndex:
+    """Pad-and-stack per-partition ``PackedIndex``es into a ``StackedIndex``.
+
+    Every index must come from one engine build (same ``block_size``,
+    ``fanout``, feature widths, quantization setting).  Zero-path indexes
+    become filler slots.  ``n_shards`` > 1 lays partitions out by the
+    greedy balanced assignment and pads the slot count to a multiple.
+    """
+    if not indexes:
+        raise ValueError("build_stacked needs at least one PackedIndex")
+    n_parts = len(indexes)
+    live = [ix for ix in indexes if ix.n_paths]
+    ref = live[0] if live else indexes[0]
+    bs, fanout = int(ref.block_size), int(ref.fanout)
+    n_gnn = int(ref.emb_multi.shape[0])
+    d = int(ref.emb.shape[1])
+    d0 = int(ref.emb0.shape[1])
+    d_cat = d * (1 + n_gnn)
+    quantized = ref.emb_q is not None
+    hashed = ref.label_hash is not None
+    for ix in live:
+        if (ix.block_size, ix.fanout, ix.emb_multi.shape[0]) != (bs, fanout, n_gnn):
+            raise ValueError("stacked partitions must share block_size/fanout/n_gnn")
+        if (ix.emb.shape[1], ix.emb0.shape[1]) != (d, d0):
+            raise ValueError("stacked partitions must share embedding widths")
+        if (ix.emb_q is not None) != quantized or (ix.label_hash is not None) != hashed:
+            raise ValueError("stacked partitions must share the quantized sidecar")
+
+    # ---- shard-balanced slot layout --------------------------------------
+    sizes = np.asarray([ix.n_paths for ix in indexes], np.int64)
+    shards = plan_shards(sizes, max(n_shards, 1))
+    per_shard = max((len(s) for s in shards), default=0)
+    per_shard = max(per_shard, 1)
+    n_slots = per_shard * max(n_shards, 1)
+    slot_of = np.zeros(n_parts, np.int64)
+    for si, members in enumerate(shards):
+        for k, pid in enumerate(members):
+            slot_of[pid] = si * per_shard + k
+
+    n_paths = np.zeros(n_slots, np.int64)
+    for i, ix in enumerate(indexes):
+        n_paths[slot_of[i]] = ix.n_paths
+    p_max = int(max(n_paths.max(), 1))
+
+    # ---- levels: align at the leaf, synthesize tops, pad blocks ----------
+    n_levels = max((len(ix.levels) for ix in live), default=1)
+    n_levels = max(n_levels, 1)
+    per_slot = {int(slot_of[i]): _slot_levels(ix, n_levels, fanout)
+                for i, ix in enumerate(indexes) if ix.n_paths}
+    level_hi, level_lo0, level_hi0 = [], [], []
+    for li in range(n_levels):  # top → leaf
+        width = max((lvls[li][0].shape[0] for lvls in per_slot.values()), default=1)
+        hi = np.full((n_slots, width, d_cat), -np.inf, np.float32)
+        lo0 = np.full((n_slots, width, d0), np.inf, np.float32)
+        hi0 = np.full((n_slots, width, d0), -np.inf, np.float32)
+        for s, lvls in per_slot.items():
+            h, l0, h0 = lvls[li]
+            hi[s, : h.shape[0]] = h
+            lo0[s, : l0.shape[0]] = l0
+            hi0[s, : h0.shape[0]] = h0
+        level_hi.append(hi)
+        level_lo0.append(lo0)
+        level_hi0.append(hi0)
+
+    # ---- leaf payload ------------------------------------------------------
+    emb_cat = np.zeros((n_slots, p_max, d_cat), np.float32)
+    emb0 = np.zeros((n_slots, p_max, d0), np.float32)
+    emb_q = np.zeros((n_slots, p_max, d_cat), np.int8) if quantized else None
+    label_hash = np.zeros((n_slots, p_max), np.int64) if hashed else None
+    real_bytes = 0
+    for i, ix in enumerate(indexes):
+        P = ix.n_paths
+        if P == 0:
+            continue
+        s = int(slot_of[i])
+        cat = (
+            np.concatenate([ix.emb] + [ix.emb_multi[k] for k in range(n_gnn)], axis=1)
+            if n_gnn
+            else ix.emb
+        )
+        emb_cat[s, :P] = cat
+        emb0[s, :P] = ix.emb0
+        if emb_q is not None:
+            emb_q[s, :P] = ix.emb_q
+        if label_hash is not None:
+            label_hash[s, :P] = ix.label_hash
+        real_bytes += ix.emb.nbytes + ix.emb0.nbytes + ix.emb_multi.nbytes
+        for lv in ix.levels:
+            # stacked levels keep the hi bound of mbr/mbr_multi + both mbr0 ends
+            real_bytes += (
+                lv["mbr"].nbytes // 2 + lv["mbr_multi"].nbytes // 2 + lv["mbr0"].nbytes
+            )
+        if ix.emb_q is not None:
+            real_bytes += ix.emb_q.nbytes
+        if ix.label_hash is not None:
+            real_bytes += ix.label_hash.nbytes
+        if ix.groups is not None:
+            real_bytes += ix.groups.nbytes()
+
+    groups = _stack_groups(
+        indexes, slot_of, n_slots, level_hi[-1].shape[1], d_cat, d0
+    )
+    return StackedIndex(
+        n_parts=n_parts,
+        n_slots=n_slots,
+        n_shards=max(n_shards, 1),
+        slot_of=slot_of,
+        n_paths=n_paths,
+        block_size=bs,
+        fanout=fanout,
+        n_gnn=n_gnn,
+        level_hi=tuple(level_hi),
+        level_lo0=tuple(level_lo0),
+        level_hi0=tuple(level_hi0),
+        emb_cat=emb_cat,
+        emb0=emb0,
+        emb_q=emb_q,
+        label_hash=label_hash,
+        groups=groups,
+        real_bytes=int(real_bytes),
+    )
+
+
+# ---------------------------------------------------------------------------
+# NumPy reference of the dense mask math (dist/probe.py jits the same
+# formulas) — used by tests to pin the stacking semantics and as the
+# ``device_stage="numpy"`` fallback of the stacked probe.
+# ---------------------------------------------------------------------------
+
+
+def stacked_masks_ref(
+    stacked: StackedIndex,
+    q_cat: np.ndarray,  # (S, Q, Dcat)
+    q0: np.ndarray,  # (S, Q, D0)
+    eps: float = 1e-6,
+    use_groups: bool = False,
+):
+    """Dense level descent (+ optional group scan) in NumPy.
+
+    Returns ``(alive, gkeep)``: per-slot (Q, B_leaf) leaf-block survival
+    and, with ``use_groups``, the (Q, G) group survival mask (already
+    ANDed with block survival) — boolean-identical to the jitted stage.
+    """
+    alive = None
+    for hi, lo0, hi0 in zip(stacked.level_hi, stacked.level_lo0, stacked.level_hi0):
+        m = (
+            np.all(q_cat[:, :, None, :] <= hi[:, None, :, :] + eps, axis=-1)
+            & np.all(q0[:, :, None, :] <= hi0[:, None, :, :] + eps, axis=-1)
+            & np.all(q0[:, :, None, :] >= lo0[:, None, :, :] - eps, axis=-1)
+        )
+        if alive is not None:
+            m &= np.repeat(alive, stacked.fanout, axis=2)[:, :, : m.shape[2]]
+        alive = m
+    gkeep = None
+    if use_groups:
+        g = stacked.groups
+        if g is None:
+            raise ValueError(
+                "use_groups=True needs the PackedGroupIndex sidecar — "
+                "run core.grouping.attach_groups(index, group_size) first"
+            )
+        gm = np.repeat(alive, g.gpb, axis=2)
+        gkeep = (
+            gm
+            & np.all(q_cat[:, :, None, :] <= g.hi[:, None, :, :] + eps, axis=-1)
+            & np.all(q0[:, :, None, :] <= g.hi0[:, None, :, :] + eps, axis=-1)
+            & np.all(q0[:, :, None, :] >= g.lo0[:, None, :, :] - eps, axis=-1)
+        )
+    return alive, gkeep

@@ -1,0 +1,291 @@
+"""Partition-parallel index probe: one vmapped descent over the stacked
+partition tensors, shard_map'd over a ``("part",)`` device mesh.
+
+``core/stacked.py`` lays every partition's packed forest into dense
+``(S, …)`` tensors; this module runs the online filter over them:
+
+  1. **device stage** — the level-synchronous MBR descent (Lemmas
+     4.3/4.4) and, for a grouped index, the GNN-PGE group-MBR scan, as
+     ONE jitted ``jax.vmap`` over the partition axis.  With more than
+     one device the vmapped body is wrapped in ``jax.shard_map`` over a
+     ``("part",)`` mesh, so each device scans only its (size-balanced)
+     slice of the partitions — the distributed GNN-PE follow-up's
+     partition-sharded traversal;
+  2. **leaf stage** — the surviving (partition, query, block/group)
+     cells expand to member rows across ALL partitions at once
+     (vectorized on the stacked layout, no per-partition Python loop),
+     ride the conservative int8 + label-hash pre-filter, and settle in
+     one fused ``dominance_scan_pairs`` call (NumPy reference behind
+     ``use_pallas=False``) — exactly the loop probe's exact predicates,
+     so row sets are identical per (partition, query).
+
+Mask math matches ``query_index_batch_multi`` bit for bit: both compute
+float32 ``bound ± eps`` compares, and the synthesized/padded bounds are
+reject sentinels that never pass (see core/stacked.py).  The probe is a
+drop-in for the loop traversal — ``GnnPeEngine`` selects it with
+``probe_impl="stacked"`` — and ``PAIR_COUNTERS`` / per-query stats keep
+the loop probe's semantics so cost models and benches read identically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core import index as index_mod
+from ..core.index import quantize_query
+from ..core.stacked import StackedIndex, build_stacked, stacked_masks_ref
+
+__all__ = ["StackedProbe"]
+
+
+def _pow2_at_least(n: int, floor: int = 8) -> int:
+    out = floor
+    while out < n:
+        out *= 2
+    return out
+
+
+class StackedProbe:
+    """Runs the two-level probe over a ``StackedIndex`` (see module doc).
+
+    ``devices=None`` uses every local jax device; a single device runs
+    plain ``jit(vmap(...))``, more than one shards the partition axis
+    with ``shard_map`` over a ``("part",)`` mesh.
+    """
+
+    def __init__(self, indexes: list, devices=None, stacked: StackedIndex | None = None):
+        self.devices = list(devices) if devices is not None else list(jax.devices())
+        n_dev = max(len(self.devices), 1)
+        self.stacked = stacked if stacked is not None else build_stacked(indexes, n_shards=n_dev)
+        self.mesh = (
+            jax.make_mesh((n_dev,), ("part",), devices=self.devices) if n_dev > 1 else None
+        )
+        self._mask_fns: dict = {}
+        self._dev_levels = (
+            tuple(self._put(x) for x in self.stacked.level_hi),
+            tuple(self._put(x) for x in self.stacked.level_lo0),
+            tuple(self._put(x) for x in self.stacked.level_hi0),
+        )
+        g = self.stacked.groups
+        self._dev_groups = (
+            (self._put(g.hi), self._put(g.lo0), self._put(g.hi0)) if g is not None else None
+        )
+
+    def _put(self, x):
+        if self.mesh is not None:
+            return jax.device_put(x, NamedSharding(self.mesh, P("part")))
+        return jnp.asarray(x)
+
+    # ------------------------------------------------------------------
+    # device stage: vmapped (and sharded) dense descent + group scan
+    # ------------------------------------------------------------------
+    def _mask_fn(self, use_groups: bool, eps: float):
+        key = (use_groups, float(eps))
+        fn = self._mask_fns.get(key)
+        if fn is not None:
+            return fn
+        fanout = self.stacked.fanout
+        gpb = self.stacked.groups.gpb if use_groups else 0
+
+        def slot_fn(levels, group_bounds, q_cat, q0):
+            level_hi, level_lo0, level_hi0 = levels
+            alive = None
+            for hi, lo0, hi0 in zip(level_hi, level_lo0, level_hi0):
+                m = (
+                    jnp.all(q_cat[:, None, :] <= hi[None] + eps, axis=-1)
+                    & jnp.all(q0[:, None, :] <= hi0[None] + eps, axis=-1)
+                    & jnp.all(q0[:, None, :] >= lo0[None] - eps, axis=-1)
+                )
+                if alive is not None:
+                    m = m & jnp.repeat(alive, fanout, axis=1)[:, : m.shape[1]]
+                alive = m
+            if not use_groups:
+                return (alive,)
+            g_hi, g_lo0, g_hi0 = group_bounds
+            gkeep = (
+                jnp.repeat(alive, gpb, axis=1)
+                & jnp.all(q_cat[:, None, :] <= g_hi[None] + eps, axis=-1)
+                & jnp.all(q0[:, None, :] <= g_hi0[None] + eps, axis=-1)
+                & jnp.all(q0[:, None, :] >= g_lo0[None] - eps, axis=-1)
+            )
+            return (alive, gkeep)
+
+        mapped = jax.vmap(slot_fn)
+        if self.mesh is not None:
+            mapped = jax.shard_map(
+                mapped, mesh=self.mesh, in_specs=P("part"), out_specs=P("part")
+            )
+        fn = jax.jit(mapped)
+        self._mask_fns[key] = fn
+        return fn
+
+    def _device_masks(self, q_cat, q0, eps, use_groups, device_stage):
+        """(S, Q, Dcat/D0) query tensors → (alive, gkeep) numpy masks."""
+        if device_stage == "numpy":
+            return stacked_masks_ref(self.stacked, q_cat, q0, eps, use_groups)
+        S, Q = q_cat.shape[:2]
+        Qp = _pow2_at_least(Q)
+        if Qp != Q:  # bucket Q: padded queries carry +inf and never survive
+            q_cat = np.concatenate(
+                [q_cat, np.full((S, Qp - Q, q_cat.shape[2]), np.inf, np.float32)], axis=1
+            )
+            q0 = np.concatenate([q0, np.zeros((S, Qp - Q, q0.shape[2]), np.float32)], axis=1)
+        group_bounds = self._dev_groups if use_groups else None
+        out = self._mask_fn(use_groups, eps)(
+            self._dev_levels, group_bounds, self._put(q_cat), self._put(q0)
+        )
+        alive = np.asarray(out[0])[:, :Q]
+        gkeep = np.asarray(out[1])[:, :Q] if use_groups else None
+        return alive, gkeep
+
+    # ------------------------------------------------------------------
+    # full probe: device masks → cross-partition leaf stage
+    # ------------------------------------------------------------------
+    def probe(
+        self,
+        q_emb: np.ndarray,  # (n_parts, Q, D) per-partition query embeddings
+        q_emb0: np.ndarray,  # (n_parts, Q, D0)
+        q_multi: np.ndarray | None = None,  # (n_gnn, n_parts, Q, D)
+        q_label_hash: np.ndarray | None = None,  # (Q,) int64, shared
+        eps: float = 1e-6,
+        use_groups: bool = False,
+        use_pallas: bool = True,
+        return_stats: bool = False,
+        device_stage: str = "jit",
+    ):
+        """Candidate rows for Q query paths against every partition.
+
+        Returns a list (per partition, engine order) of lists (per
+        query) of int64 row arrays — the same rows, in the same order,
+        as ``query_index_batch_multi`` over the source indexes; with
+        ``return_stats``, also the per-partition per-query stats dicts.
+        """
+        st = self.stacked
+        if use_groups and st.groups is None and int(st.n_paths.sum()) > 0:
+            raise ValueError(
+                "use_groups=True needs the PackedGroupIndex sidecar — "
+                "run core.grouping.attach_groups(index, group_size) first"
+            )
+        q_emb = np.asarray(q_emb, np.float32)
+        q_emb0 = np.asarray(q_emb0, np.float32)
+        n_parts, Q = q_emb.shape[:2]
+        if n_parts != st.n_parts:
+            raise ValueError(f"expected {st.n_parts} partitions, got {n_parts}")
+        if Q == 0:
+            results = [[] for _ in range(n_parts)]
+            return (results, [[] for _ in range(n_parts)]) if return_stats else results
+        if int(st.n_paths.sum()) == 0:
+            # every partition is empty (zero length-L paths): the loop probe
+            # returns empty row sets, so the stacked probe must too — even
+            # under use_groups, where no sidecar could have been stacked
+            results = [
+                [np.zeros((0,), np.int64) for _ in range(Q)] for _ in range(n_parts)
+            ]
+            if not return_stats:
+                return results
+            zero = (
+                {"scanned_blocks": 0, "scanned_groups": 0,
+                 "surviving_groups": 0, "scanned_paths": 0}
+                if use_groups
+                else {"scanned_blocks": 0, "scanned_paths": 0}
+            )
+            return results, [[dict(zero) for _ in range(Q)] for _ in range(n_parts)]
+        parts = [q_emb] + (
+            [np.asarray(q_multi[i], np.float32) for i in range(st.n_gnn)] if st.n_gnn else []
+        )
+        cat = np.concatenate(parts, axis=2) if len(parts) > 1 else q_emb
+        # scatter engine-order queries into shard-balanced slots
+        S = st.n_slots
+        q_cat = np.zeros((S, Q, cat.shape[2]), np.float32)
+        q0 = np.zeros((S, Q, q_emb0.shape[2]), np.float32)
+        q_cat[st.slot_of] = cat
+        q0[st.slot_of] = q_emb0
+
+        alive, gkeep = self._device_masks(q_cat, q0, eps, use_groups, device_stage)
+
+        # ---- leaf stage: expand survivors across ALL partitions at once --
+        bs = st.block_size
+        checked = member_rows = None
+        if use_groups:
+            g = st.groups
+            B = alive.shape[2]
+            groups_in_block = (g.count.reshape(S, B, g.gpb) > 0).sum(axis=2)
+            checked = np.einsum("sqb,sb->sq", alive, groups_in_block)
+            index_mod.PAIR_COUNTERS["group_pairs"] += int(checked.sum())
+            pi, qi, gi = np.nonzero(gkeep)
+            starts = g.start[pi, gi]
+            counts = g.count[pi, gi]
+            rows = index_mod._expand_segments(starts, counts)
+            pr = np.repeat(pi, counts).astype(np.int64)
+            qr = np.repeat(qi, counts).astype(np.int64)
+        else:
+            pi, qi, bi = np.nonzero(alive)
+            row_mat = bi[:, None] * bs + np.arange(bs)[None, :]
+            valid = row_mat < st.n_paths[pi][:, None]
+            rows = row_mat[valid].astype(np.int64)
+            pr = np.repeat(pi, bs).reshape(-1, bs)[valid].astype(np.int64)
+            qr = np.repeat(qi, bs).reshape(-1, bs)[valid].astype(np.int64)
+        index_mod.PAIR_COUNTERS["leaf_pairs"] += int(rows.size)
+        combo = pr * Q + qr
+        if return_stats and use_groups:
+            member_rows = np.bincount(combo, minlength=S * Q)
+        # conservative int8 + label-hash pre-filter (§Perf C1/C2)
+        if st.emb_q is not None and rows.size:
+            qq = quantize_query(q_cat)
+            pre = np.all(qq[pr, qr] <= st.emb_q[pr, rows], axis=1)
+            if st.label_hash is not None and q_label_hash is not None:
+                pre &= st.label_hash[pr, rows] == np.asarray(q_label_hash)[qr]
+            rows, pr, qr, combo = rows[pre], pr[pre], qr[pre], combo[pre]
+        # exact Lemma 4.1 + 4.2 verdicts — one fused pass for every partition
+        if use_pallas:
+            keep = index_mod._pairs_keep_mask(
+                q_cat[pr, qr], q0[pr, qr], st.emb_cat[pr, rows], st.emb0[pr, rows],
+                eps, use_pallas=True,
+            )
+        else:  # label short-circuit, like _pairs_keep_mask_numpy_lazy
+            keep = np.all(np.abs(st.emb0[pr, rows] - q0[pr, qr]) <= eps, axis=1)
+            sub = np.nonzero(keep)[0]
+            if sub.size:
+                keep[sub] = np.all(
+                    q_cat[pr[sub], qr[sub]] <= st.emb_cat[pr[sub], rows[sub]] + eps, axis=1
+                )
+        splits = np.split(
+            rows[keep], np.cumsum(np.bincount(combo[keep], minlength=S * Q))[:-1]
+        )
+        results = [
+            [splits[int(st.slot_of[i]) * Q + qj] for qj in range(Q)]
+            for i in range(n_parts)
+        ]
+        if not return_stats:
+            return results
+        scanned = alive.sum(axis=2)
+        surviving = gkeep.sum(axis=2) if use_groups else None
+        stats = []
+        for i in range(n_parts):
+            s = int(st.slot_of[i])
+            if use_groups:
+                stats.append(
+                    [
+                        {
+                            "scanned_blocks": int(scanned[s, qj]),
+                            "scanned_groups": int(checked[s, qj]),
+                            "surviving_groups": int(surviving[s, qj]),
+                            "scanned_paths": int(member_rows[s * Q + qj]),
+                        }
+                        for qj in range(Q)
+                    ]
+                )
+            else:
+                stats.append(
+                    [
+                        {
+                            "scanned_blocks": int(scanned[s, qj]),
+                            "scanned_paths": int(scanned[s, qj]) * bs,
+                        }
+                        for qj in range(Q)
+                    ]
+                )
+        return results, stats

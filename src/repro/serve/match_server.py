@@ -24,6 +24,10 @@ class MatchServeConfig:
     # probe layer override per server ("path" | "grouped" | None = engine
     # config) — lets one engine serve both kinds for A/B comparison
     index_kind: str | None = None
+    # index traversal override ("loop" | "stacked" | None = engine config);
+    # "stacked" probes the dense stacked-tensor index, sharded over the
+    # local device mesh (dist/probe.py)
+    probe_impl: str | None = None
 
 
 @dataclasses.dataclass
@@ -58,7 +62,9 @@ class MatchServer:
         batch, self.queue = self.queue[: self.cfg.max_batch], self.queue[self.cfg.max_batch:]
         t_tick = time.perf_counter()
         results = self.engine.match_many(
-            [r.query for r in batch], index_kind=self.cfg.index_kind
+            [r.query for r in batch],
+            index_kind=self.cfg.index_kind,
+            probe_impl=self.cfg.probe_impl,
         )
         now = time.perf_counter()
         for r, matches in zip(batch, results):
