@@ -1,0 +1,209 @@
+"""Live-graph serving: delta updates + result cache vs offline rebuilds.
+
+Three measurements, one JSON artifact (``BENCH_updates.json``):
+
+1. **Update throughput** — the same seeded edge-churn batches applied to
+   two identical engines: ``apply_updates(strategy="delta")`` (frozen-GNN
+   incremental re-embedding into per-partition delta buffers + tombstones
+   + per-partition compaction, core/delta.py) vs
+   ``strategy="rebuild"`` (re-embed/re-enumerate/re-pack EVERY partition
+   — what a frozen index forces today).  Matches of a probe query set
+   are asserted identical at every epoch, so the speedup buys nothing in
+   exactness.
+
+2. **Repeat-heavy query stream** — a request stream drawn from a small
+   distinct-query pool served twice by the same engine: with the
+   signature-keyed result cache (serve/cache.py) and without.  Reports
+   per-request p50/p95 latency and the cache hit rate.
+
+3. **Mixed 90/10 stream** — queries and updates interleaved through the
+   ``MatchServer`` tick loop (cache on): throughput, service latency
+   percentiles, updates applied, and a final-epoch exactness check
+   against a from-scratch rebuild.
+
+CI gates ``match_sets_identical``, ``update_speedup_ge_5x`` and
+``cache_p50_ge_1_3x`` via benchmarks/compare.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import GraphUpdate
+from repro.core.matcher import sort_matches
+from repro.serve.match_server import MatchServeConfig, MatchServer
+
+from .common import build_engine, emit, make_graph, sample_queries
+
+UPDATE_BATCHES = 6
+EDGES_PER_BATCH = 4
+POOL = 6  # distinct queries in the repeat-heavy stream
+STREAM = 48  # requests in the repeat-heavy stream
+MIXED_REQUESTS = 40
+MIXED_UPDATE_EVERY = 10  # ⇒ 90/10 query/update mix
+
+
+def _rand_update(rng, g) -> GraphUpdate:
+    e = g.edge_array()
+    rem = e[rng.choice(e.shape[0], size=EDGES_PER_BATCH, replace=False)]
+    add = rng.integers(0, g.n_vertices, size=(EDGES_PER_BATCH, 2))
+    return GraphUpdate(add_edges=add, remove_edges=rem)
+
+
+def _sorted_matches(results):
+    return [sort_matches(m) for m in results]
+
+
+def _pcts(lat_s: list) -> tuple[float, float]:
+    arr = np.sort(np.asarray(lat_s)) * 1e3
+    return float(arr[len(arr) // 2]), float(arr[min(int(len(arr) * 0.95), len(arr) - 1)])
+
+
+def run(full: bool = False, json_path: str | None = None) -> dict:
+    n = 10_000 if full else 4_000
+    g = make_graph(n=n, seed=13)
+    # compaction threshold tightened so the update phase exercises real
+    # per-partition re-sorts (and, under probe_impl="stacked", elastic
+    # re-stacking) — not just buffer growth
+    eng = build_engine(
+        g, partition_size=250, index_kind="grouped", group_size=16, cache=True,
+        delta_compact_min=192, delta_compact_frac=0.08,
+    )
+    eng_rebuild = build_engine(g, partition_size=250, index_kind="grouped", group_size=16)
+    queries = sample_queries(g, n=8, seed0=77)
+    rng = np.random.default_rng(0)
+
+    # ---- 1. update throughput: delta vs full rebuild per batch ----------
+    cache = eng._result_cache
+    eng._result_cache = None  # phase 1/3 isolate the index path
+    updates = []
+    t_delta = 0.0
+    t_rebuild = 0.0
+    identical = True
+    for _ in range(UPDATE_BATCHES):
+        upd = _rand_update(rng, eng.graph)
+        updates.append(upd)
+        t0 = time.perf_counter()
+        eng.apply_updates(upd)
+        t_delta += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        eng_rebuild.apply_updates(upd, strategy="rebuild")
+        t_rebuild += time.perf_counter() - t0
+        md = _sorted_matches(eng.match_many(queries))
+        mr = _sorted_matches(eng_rebuild.match_many(queries))
+        identical &= md == mr
+    update_speedup = t_rebuild / max(t_delta, 1e-12)
+    dstats = eng.delta_stats()
+    emit(
+        "updates/delta_total",
+        1e6 * t_delta,
+        f"batches={UPDATE_BATCHES} compactions={dstats.get('n_compactions', 0)}",
+    )
+    emit("updates/rebuild_total", 1e6 * t_rebuild, f"speedup={update_speedup:.1f}x")
+
+    # ---- 2. repeat-heavy stream: cache on vs off ------------------------
+    pool = sample_queries(g, n=POOL, seed0=500)
+    stream = [pool[int(rng.integers(0, len(pool)))] for _ in range(STREAM)]
+    lat_off = []
+    for q in stream:  # cache disabled
+        t0 = time.perf_counter()
+        eng.match(q)
+        lat_off.append(time.perf_counter() - t0)
+    cache.clear()
+    eng._result_cache = cache
+    lat_on = []
+    for q in stream:
+        t0 = time.perf_counter()
+        eng.match(q)
+        lat_on.append(time.perf_counter() - t0)
+    p50_off, p95_off = _pcts(lat_off)
+    p50_on, p95_on = _pcts(lat_on)
+    cache_p50_speedup = p50_off / max(p50_on, 1e-9)
+    hit_rate = cache.stats.hit_rate()
+    emit("updates/nocache_p50", 1e3 * p50_off, f"p95={p95_off:.1f}ms")
+    emit(
+        "updates/cache_p50",
+        1e3 * p50_on,
+        f"p95={p95_on:.1f}ms speedup={cache_p50_speedup:.2f}x hit_rate={hit_rate:.0%}",
+    )
+
+    # ---- 3. mixed 90/10 query/update stream through the MatchServer -----
+    cache.clear()
+    server = MatchServer(eng, MatchServeConfig(max_batch=8))
+    n_updates = 0
+    t0 = time.perf_counter()
+    for r in range(MIXED_REQUESTS):
+        server.submit(stream[r % len(stream)])
+        if (r + 1) % MIXED_UPDATE_EVERY == 0:
+            upd = _rand_update(rng, eng.graph)
+            updates.append(upd)
+            server.submit_update(upd)
+            n_updates += 1
+        if len(server.queue) >= 8:
+            server.step()
+    server.run_until_drained()
+    mixed_wall = time.perf_counter() - t0
+    mixed_p50, mixed_p95 = _pcts(list(server.service_s.values()))
+    # final-epoch exactness: the rebuild engine replays the mixed updates
+    for upd in updates[UPDATE_BATCHES:]:
+        eng_rebuild.apply_updates(upd, strategy="rebuild")
+    final_d = _sorted_matches(eng.match_many(pool))
+    final_r = _sorted_matches(eng_rebuild.match_many(pool))
+    identical &= final_d == final_r
+    emit(
+        "updates/mixed_stream",
+        1e6 * mixed_wall,
+        f"qps={MIXED_REQUESTS / mixed_wall:.1f} p50={mixed_p50:.1f}ms "
+        f"updates={n_updates} identical={identical}",
+    )
+
+    rec = {
+        "n_vertices": int(g.n_vertices),
+        "n_partitions": len(eng.models),
+        "n_update_batches": UPDATE_BATCHES,
+        "edges_per_batch": EDGES_PER_BATCH,
+        "delta_update_s": t_delta,
+        "rebuild_update_s": t_rebuild,
+        "update_speedup": update_speedup,
+        "update_speedup_ge_5x": bool(update_speedup >= 5.0),
+        "n_compactions": int(dstats.get("n_compactions", 0)),
+        "delta_rows": int(dstats.get("delta_rows", 0)),
+        "tombstones": int(dstats.get("tombstones", 0)),
+        "nocache_p50_ms": p50_off,
+        "nocache_p95_ms": p95_off,
+        "cache_p50_ms": p50_on,
+        "cache_p95_ms": p95_on,
+        "cache_p50_speedup": cache_p50_speedup,
+        "cache_p50_ge_1_3x": bool(cache_p50_speedup >= 1.3),
+        "cache_hit_rate": hit_rate,
+        "mixed_requests": MIXED_REQUESTS,
+        "mixed_updates": n_updates,
+        "mixed_qps": MIXED_REQUESTS / mixed_wall,
+        "mixed_p50_ms": mixed_p50,
+        "mixed_p95_ms": mixed_p95,
+        "match_sets_identical": bool(identical),
+    }
+    json_path = json_path or os.environ.get("BENCH_JSON")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    rec = run(full=args.full, json_path=args.json)
+    print(
+        f"# delta {rec['update_speedup']:.1f}x over rebuild-per-update; "
+        f"cache p50 {rec['cache_p50_speedup']:.2f}x (hit rate "
+        f"{rec['cache_hit_rate']:.0%}); identical={rec['match_sets_identical']}"
+    )

@@ -52,6 +52,21 @@ SPECS = {
         "higher_is_better": ["speedup"],
         "bool_true": ["match_sets_identical"],
     },
+    # live-graph serving: delta updates vs full-rebuild-per-update and the
+    # signature-keyed result cache.  The required absolute thresholds
+    # (≥5× update speedup on update-heavy workloads, ≥1.3× p50 on
+    # repeat-heavy query streams) gate as booleans computed by the bench
+    # itself — baseline-independent; the raw speedup ratios (≈8× / ≈90×)
+    # stay ungated because their run-to-run variance dwarfs the 25% band.
+    "BENCH_updates.json": {
+        "lower_is_better": ["delta_update_s", "cache_p50_ms"],
+        "higher_is_better": ["cache_hit_rate"],
+        "bool_true": [
+            "match_sets_identical",
+            "update_speedup_ge_5x",
+            "cache_p50_ge_1_3x",
+        ],
+    },
 }
 DEFAULT_FILES = list(SPECS)
 

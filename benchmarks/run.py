@@ -25,6 +25,7 @@ def main() -> None:
         bench_pruning,
         bench_query_scaling,
         bench_stacked,
+        bench_updates,
         bench_vs_baselines,
     )
 
@@ -32,6 +33,7 @@ def main() -> None:
         ("online_batch", bench_online_batch.run),
         ("grouped", bench_grouped.run),
         ("stacked", bench_stacked.run),
+        ("updates", bench_updates.run),
         ("fig8_pruning", bench_pruning.run),
         ("fig9_baselines", bench_vs_baselines.run),
         ("fig7_params", bench_params.run),

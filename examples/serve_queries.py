@@ -5,14 +5,21 @@ to ``--batch`` queries into one match_many pass (shared star embedding,
 one index probe + one leaf scan per partition) — reporting latency
 percentiles + throughput and verifying exactness on a sample.
 
+``--update-every K`` turns the stream into a live mixed query/update
+workload: every K requests one random edge insertion/deletion batch is
+queued via ``submit_update``, and the server interleaves update ticks
+(delta index epochs, core/delta.py) with query ticks.  ``--cache``
+enables the signature-keyed result cache (serve/cache.py).
+
     PYTHONPATH=src python examples/serve_queries.py [--n 4000] [--requests 60]
+    PYTHONPATH=src python examples/serve_queries.py --update-every 5 --cache
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.core import GnnPeConfig, GnnPeEngine, vf2_match
+from repro.core import GnnPeConfig, GnnPeEngine, GraphUpdate, vf2_match
 from repro.graphs import newman_watts_strogatz, random_connected_query
 from repro.serve.match_server import MatchServeConfig, MatchServer
 
@@ -33,6 +40,15 @@ def main():
         help="index traversal: per-partition Python loop, or the stacked-"
         "tensor probe vmapped/sharded over the local devices",
     )
+    ap.add_argument(
+        "--update-every", type=int, default=0,
+        help="mixed live stream: queue one random edge add/remove batch "
+        "every N requests (0 = query-only stream)",
+    )
+    ap.add_argument(
+        "--cache", action="store_true",
+        help="enable the signature-keyed result cache (serve/cache.py)",
+    )
     args = ap.parse_args()
 
     g = newman_watts_strogatz(args.n, k=4, p=0.1, n_labels=50, seed=0)
@@ -42,7 +58,7 @@ def main():
         GnnPeConfig(
             encoder="monotone", n_partitions=max(args.n // 1000, 1), n_multi=2,
             index_kind=args.index_kind, group_size=args.group_size,
-            probe_impl=args.probe_impl,
+            probe_impl=args.probe_impl, cache=args.cache,
         )
     ).build(g)
     if args.probe_impl == "stacked":
@@ -62,25 +78,44 @@ def main():
           f"({engine.offline_stats['n_paths']} paths{grp}, "
           f"{engine.offline_stats['index_bytes']/1e6:.1f} MB index)")
 
-    # request stream: mixed query sizes, fused into batches by MatchServer
+    # request stream: mixed query sizes, fused into batches by MatchServer;
+    # with --update-every, update ticks interleave with the query ticks
     rng = np.random.default_rng(0)
     server = MatchServer(engine, MatchServeConfig(max_batch=args.batch))
     sent = {}
+    verifiable = set()  # rids served at the final graph epoch
+    t_serve = time.perf_counter()
     for r in range(args.requests):
         size = int(rng.choice([5, 6, 8]))
         try:
             q = random_connected_query(g, size, seed=1000 + r)
         except RuntimeError:
             continue
-        sent[server.submit(q)] = (r, q)
-    t_serve = time.perf_counter()
+        rid = server.submit(q)
+        sent[rid] = (r, q)
+        verifiable.add(rid)
+        if args.update_every and (r + 1) % args.update_every == 0:
+            cur = engine.graph
+            e = cur.edge_array()
+            rem = e[rng.choice(e.shape[0], size=2, replace=False)]
+            add = rng.integers(0, cur.n_vertices, size=(2, 2))
+            server.submit_update(GraphUpdate(add_edges=add, remove_edges=rem))
+            # queries submitted before this update may be served pre-epoch;
+            # only later ones are checked against the final graph
+            server.run_until_drained()
+            verifiable.clear()
+        elif len(server.queue) >= args.batch:
+            server.step()
     out = server.run_until_drained()
     wall = time.perf_counter() - t_serve
     n_matches = sum(len(m) for m in out.values())
     verified = 0
+    final_g = engine.graph
     for rid, (r, q) in sent.items():
-        if r % args.verify_every == 0:  # spot-check exactness in production
-            assert set(out[rid]) == set(vf2_match(g, q)), f"request {r}: mismatch!"
+        if rid in verifiable and (args.update_every or r % args.verify_every == 0):
+            # spot-check exactness in production (vs the live graph);
+            # under a mixed stream every final-epoch request is checked
+            assert set(out[rid]) == set(vf2_match(final_g, q)), f"request {r}: mismatch!"
             verified += 1
     # service time (the fused tick a request rode in) — queue wait from the
     # pre-loaded backlog would swamp the percentiles and mislead
@@ -92,6 +127,20 @@ def main():
         f"p99={lat_ms[min(int(len(lat)*0.99), len(lat)-1)]:.1f}ms | "
         f"{n_matches} total matches | exactness verified on {verified} samples"
     )
+    if server.n_updates_applied:
+        ds = engine.delta_stats()
+        print(
+            f"[serve] live updates: {server.n_updates_applied} applied over "
+            f"{len(server.update_s)} ticks (epoch {ds['epoch']}, "
+            f"{ds.get('n_compactions', 0)} compactions, "
+            f"{ds.get('delta_rows', 0)} delta rows, {ds.get('tombstones', 0)} tombstones)"
+        )
+    if args.cache and engine._result_cache is not None:
+        cs = engine._result_cache.stats
+        print(
+            f"[serve] result cache: {cs.hits} hits / {cs.misses} misses "
+            f"(hit rate {cs.hit_rate():.0%}), {cs.invalidated} invalidated"
+        )
 
 
 if __name__ == "__main__":

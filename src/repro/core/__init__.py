@@ -1,4 +1,5 @@
 from .baselines import gql_match, match_count, quicksi_match, vf2_match
+from .delta import DeltaIndex, GraphUpdate, apply_graph_update, probe_delta_multi
 from .encoder import EncoderConfig, GATEncoder, MonotoneEncoder, make_encoder
 from .engine import GnnPeConfig, GnnPeEngine, PartitionModel, QueryStats
 from .grouping import attach_groups, group_paths
@@ -11,7 +12,7 @@ from .index import (
     query_index_batch_multi,
     reset_pair_counters,
 )
-from .matcher import join_candidates, match_from_candidates, refine
+from .matcher import join_candidates, match_from_candidates, refine, sort_matches
 from .paths import concat_path_embeddings, enumerate_paths
 from .planner import QueryPlan, canonical_form, plan_query
 from .stacked import StackedIndex, build_stacked, plan_shards
@@ -23,6 +24,10 @@ __all__ = [
     "GnnPeEngine",
     "PartitionModel",
     "QueryStats",
+    "DeltaIndex",
+    "GraphUpdate",
+    "apply_graph_update",
+    "probe_delta_multi",
     "EncoderConfig",
     "GATEncoder",
     "MonotoneEncoder",
@@ -54,6 +59,7 @@ __all__ = [
     "join_candidates",
     "refine",
     "match_from_candidates",
+    "sort_matches",
     "vf2_match",
     "quicksi_match",
     "gql_match",

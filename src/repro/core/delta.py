@@ -1,0 +1,472 @@
+"""Delta index — online graph updates without an offline rebuild (§live serving).
+
+The paper supports dynamic graphs by *incremental maintenance* of path
+embeddings: a vertex/edge update only perturbs the stars of the touched
+vertices, so only paths running through them need re-embedding — the
+partition GNNs stay frozen.  This module turns that rule into a serving
+subsystem:
+
+  * ``GraphUpdate`` describes a batch of edge/vertex insertions and
+    deletions; ``apply_graph_update`` produces the updated CSR graph and
+    the *touched* vertex set (endpoints of edges that actually changed,
+    plus appended/removed vertices).  Vertex ids are never renumbered —
+    a removed vertex becomes an isolated zombie that no length ≥ 1 path
+    (and hence no match) can reach.
+
+  * ``DeltaIndex`` absorbs those updates against the frozen per-partition
+    ``PackedIndex``es: every main-index path containing a touched vertex
+    is **tombstoned** by row id (the packed forest and its MBRs are left
+    untouched — ancestors of a dead row can only over-approximate, never
+    miss), and the affected paths of the *new* graph are re-embedded with
+    the frozen GNN params and appended to a small unsorted **delta
+    buffer** per partition.
+
+  * probes become ``main ∪ delta − tombstones``: the main side keeps its
+    level-synchronous descent, the delta side is scanned as brute
+    (query, row) pairs through the same fused exact predicates
+    (``probe_delta_multi`` — no forest; the buffer is small by
+    construction), so candidate sets — and therefore matches — equal a
+    from-scratch rebuild of the index at every epoch.
+
+  * when a partition's delta pressure (buffer rows + tombstones) crosses
+    a threshold, ``compact_partition`` re-sorts/re-packs JUST that
+    partition (live main rows + buffer rows through the ordinary
+    ``build_index``) and clears its delta state; the other partitions'
+    indexes are untouched, and a stacked probe re-stacks only the
+    affected shard slot (``dist.probe.StackedProbe.update_slot``).
+
+Soundness of the ``main ∪ delta − tombstones`` decomposition: a path of
+the updated graph either contains a touched vertex (it is re-enumerated
+into the delta — its root must lie within ``l`` hops of a touched
+vertex, so the enumeration is local) or it does not (then none of its
+edges or vertex stars changed, so the old main row, which is not
+tombstoned, still carries its exact embedding).  The two sides are
+disjoint by the same test, so no path is double-counted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..graphs import Graph, from_edge_list
+from .grouping import attach_groups
+from .index import (
+    PAIR_COUNTERS,
+    PackedIndex,
+    _gather_pair_operands,
+    _pairs_keep_mask,
+    _pairs_keep_mask_numpy_lazy,
+    _prefilter_pairs,
+    build_index,
+    hash_labels,
+    quantize_data,
+)
+
+__all__ = [
+    "GraphUpdate",
+    "apply_graph_update",
+    "PartitionDelta",
+    "DeltaIndex",
+    "probe_delta_multi",
+    "l_hop_reach",
+    "paths_touching",
+]
+
+
+_EMPTY_EDGES = np.zeros((0, 2), np.int64)
+_EMPTY_I64 = np.zeros((0,), np.int64)
+_EMPTY_I32 = np.zeros((0,), np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphUpdate:
+    """One batch of online graph edits (applied atomically as one epoch).
+
+    ``add_vertex_labels`` appends vertices with the given labels (ids are
+    assigned sequentially after the current max).  ``remove_vertices``
+    strips every incident edge and leaves the id in place as an isolated
+    vertex — ids are stable across the update stream, so cached matches
+    and index rows never need renumbering.
+    """
+
+    add_edges: np.ndarray = dataclasses.field(default_factory=lambda: _EMPTY_EDGES)
+    remove_edges: np.ndarray = dataclasses.field(default_factory=lambda: _EMPTY_EDGES)
+    add_vertex_labels: np.ndarray = dataclasses.field(default_factory=lambda: _EMPTY_I32)
+    remove_vertices: np.ndarray = dataclasses.field(default_factory=lambda: _EMPTY_I64)
+
+    def is_empty(self) -> bool:
+        return not (
+            len(self.add_edges)
+            or len(self.remove_edges)
+            or len(self.add_vertex_labels)
+            or len(self.remove_vertices)
+        )
+
+
+def _norm_edges(edges: np.ndarray, n: int) -> np.ndarray:
+    """(k, 2) int64 with u < v, self loops dropped, deduplicated."""
+    e = np.asarray(edges, np.int64).reshape(-1, 2)
+    if e.size == 0:
+        return _EMPTY_EDGES
+    if e.min() < 0 or e.max() >= n:
+        raise ValueError(f"edge endpoint out of range [0, {n})")
+    e = np.stack([e.min(axis=1), e.max(axis=1)], axis=1)
+    e = e[e[:, 0] != e[:, 1]]
+    return np.unique(e, axis=0)
+
+
+def apply_graph_update(g: Graph, upd: GraphUpdate) -> tuple[Graph, np.ndarray]:
+    """Apply one update batch → ``(new_graph, touched_vertex_ids)``.
+
+    ``touched`` contains only vertices whose star actually changed (an
+    "insertion" of an existing edge or a removal of an absent one is a
+    no-op) plus appended/removed vertex ids — exactly the seed set of
+    the incremental maintenance rule.
+    """
+    n_old = g.n_vertices
+    add_labels = np.asarray(upd.add_vertex_labels, np.int32).reshape(-1)
+    labels = np.concatenate([g.labels, add_labels]) if add_labels.size else g.labels
+    n_new = n_old + add_labels.size
+
+    existing = g.edge_array().astype(np.int64)
+    exist_keys = existing[:, 0] * n_new + existing[:, 1]
+
+    add = _norm_edges(upd.add_edges, n_new)
+    rem = _norm_edges(upd.remove_edges, n_new)
+    removed_vs = np.unique(np.asarray(upd.remove_vertices, np.int64).reshape(-1))
+    if removed_vs.size and (removed_vs.min() < 0 or removed_vs.max() >= n_new):
+        raise ValueError(f"removed vertex out of range [0, {n_new})")
+
+    def incident(e: np.ndarray) -> np.ndarray:
+        if removed_vs.size == 0 or e.size == 0:
+            return np.zeros(e.shape[0], bool)
+        return np.isin(e[:, 0], removed_vs) | np.isin(e[:, 1], removed_vs)
+
+    # vertex removal wins over edge insertion inside one batch
+    add = add[~incident(add)]
+    add_keys = add[:, 0] * n_new + add[:, 1]
+    eff_add = add[~np.isin(add_keys, exist_keys)]
+
+    rem_mask = incident(existing)
+    if rem.size:
+        rem_mask |= np.isin(exist_keys, rem[:, 0] * n_new + rem[:, 1])
+    eff_rem = existing[rem_mask]
+
+    kept = existing[~rem_mask]
+    new_edges = np.concatenate([kept, eff_add], axis=0) if eff_add.size else kept
+    new_g = from_edge_list(n_new, new_edges, labels)
+
+    touched = np.unique(
+        np.concatenate(
+            [
+                eff_add.reshape(-1),
+                eff_rem.reshape(-1),
+                removed_vs,
+                np.arange(n_old, n_new, dtype=np.int64),
+            ]
+        )
+    )
+    return new_g, touched
+
+
+def l_hop_reach(g: Graph, seeds: np.ndarray, hops: int) -> np.ndarray:
+    """Sorted vertex ids within ``hops`` of any seed (vectorized BFS)."""
+    cur = np.unique(np.asarray(seeds, np.int64))
+    frontier = cur
+    deg = g.degrees.astype(np.int64)
+    for _ in range(hops):
+        if frontier.size == 0:
+            break
+        reps = deg[frontier]
+        total = int(reps.sum())
+        if total == 0:
+            break
+        starts = g.offsets[frontier]
+        cum = np.cumsum(reps)
+        pos = np.arange(total, dtype=np.int64) - np.repeat(cum - reps, reps)
+        nbrs = g.nbrs[np.repeat(starts, reps) + pos].astype(np.int64)
+        frontier = np.setdiff1d(np.unique(nbrs), cur, assume_unique=True)
+        cur = np.union1d(cur, frontier)
+    return cur
+
+
+def paths_touching(paths: np.ndarray, touched: np.ndarray) -> np.ndarray:
+    """(P,) bool — does each path row contain any touched vertex."""
+    if paths.shape[0] == 0 or touched.size == 0:
+        return np.zeros(paths.shape[0], bool)
+    return np.isin(paths, touched).any(axis=1)
+
+
+# --------------------------------------------------------------------------
+# Per-partition delta state
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PartitionDelta:
+    """Tombstones over one partition's main index + its unsorted buffer.
+
+    The buffer arrays duck-type the leaf payload of a ``PackedIndex``
+    (``emb``/``emb0``/``emb_multi``/``emb_q``/``label_hash``) so the
+    fused pair predicates of core/index.py run on them unchanged.
+    """
+
+    tombstone: np.ndarray  # (P,) bool over the main index rows
+    paths: np.ndarray  # (B, l+1) int32 — buffer paths (unsorted)
+    emb: np.ndarray  # (B, D) float32
+    emb0: np.ndarray  # (B, D0) float32
+    emb_multi: np.ndarray  # (n_gnn, B, D) float32
+    emb_q: np.ndarray | None  # (B, Dcat) int8 — §Perf C1 sidecar (quantized builds)
+    label_hash: np.ndarray | None  # (B,) int64
+    # dead-row count maintained incrementally: the probe consults it per
+    # memo entry, so it must not re-scan the (P,) mask every time
+    n_tomb: int = 0
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.paths.shape[0])
+
+    @property
+    def n_tombstones(self) -> int:
+        return self.n_tomb
+
+    @property
+    def pressure(self) -> int:
+        """Rows of deferred re-sort work: buffer rows + dead main rows."""
+        return self.n_rows + self.n_tombstones
+
+    def nbytes(self) -> int:
+        total = (
+            self.tombstone.nbytes
+            + self.paths.nbytes
+            + self.emb.nbytes
+            + self.emb0.nbytes
+            + self.emb_multi.nbytes
+        )
+        if self.emb_q is not None:
+            total += self.emb_q.nbytes
+        if self.label_hash is not None:
+            total += self.label_hash.nbytes
+        return int(total)
+
+
+def _empty_delta(index: PackedIndex) -> PartitionDelta:
+    P = index.n_paths
+    L = index.paths.shape[1] if index.paths.ndim == 2 else 1
+    D = index.emb.shape[1] if index.emb.ndim == 2 else 0
+    D0 = index.emb0.shape[1] if index.emb0.ndim == 2 else 0
+    n_gnn = index.emb_multi.shape[0]
+    quantized = index.emb_q is not None
+    hashed = index.label_hash is not None
+    return PartitionDelta(
+        tombstone=np.zeros(P, bool),
+        paths=np.zeros((0, L), np.int32),
+        emb=np.zeros((0, D), np.float32),
+        emb0=np.zeros((0, D0), np.float32),
+        emb_multi=np.zeros((n_gnn, 0, D), np.float32),
+        emb_q=np.zeros((0, D * (1 + n_gnn)), np.int8) if quantized else None,
+        label_hash=np.zeros((0,), np.int64) if hashed else None,
+    )
+
+
+class DeltaIndex:
+    """Delta state for every partition of one engine build.
+
+    Partition indices here are *model* indices (the engine's order), the
+    same axis the probes, the stacked layout and the result cache use.
+    """
+
+    def __init__(self, indexes: list):
+        self.parts: list[PartitionDelta] = [_empty_delta(ix) for ix in indexes]
+        self.epoch = 0
+        self.n_compactions = 0
+
+    # ------------------------------------------------------------------
+    def tombstone_touched(self, mi: int, index: PackedIndex, touched: np.ndarray) -> tuple[int, int]:
+        """Kill main rows + buffer rows containing a touched vertex.
+
+        Returns ``(newly_tombstoned_main_rows, dropped_buffer_rows)``.
+        """
+        dp = self.parts[mi]
+        dead = paths_touching(index.paths, touched)
+        new_tomb = int((dead & ~dp.tombstone).sum())
+        dp.tombstone |= dead
+        dp.n_tomb += new_tomb
+        dropped = 0
+        if dp.n_rows:
+            keep = ~paths_touching(dp.paths, touched)
+            dropped = int((~keep).sum())
+            if dropped:
+                dp.paths = dp.paths[keep]
+                dp.emb = dp.emb[keep]
+                dp.emb0 = dp.emb0[keep]
+                dp.emb_multi = dp.emb_multi[:, keep]
+                if dp.emb_q is not None:
+                    dp.emb_q = dp.emb_q[keep]
+                if dp.label_hash is not None:
+                    dp.label_hash = dp.label_hash[keep]
+        return new_tomb, dropped
+
+    def append(
+        self,
+        mi: int,
+        paths: np.ndarray,
+        emb: np.ndarray,
+        emb0: np.ndarray,
+        emb_multi: np.ndarray,
+        path_labels: np.ndarray | None = None,
+    ) -> None:
+        """Append re-embedded affected paths to partition ``mi``'s buffer.
+
+        The int8/label-hash sidecar is derived here with the same
+        ``quantize_data``/``hash_labels`` the offline builder uses, so
+        buffer rows prefilter exactly like main rows.
+        """
+        if paths.shape[0] == 0:
+            return
+        dp = self.parts[mi]
+        dp.paths = np.concatenate([dp.paths, paths.astype(np.int32)])
+        dp.emb = np.concatenate([dp.emb, emb.astype(np.float32)])
+        dp.emb0 = np.concatenate([dp.emb0, emb0.astype(np.float32)])
+        dp.emb_multi = np.concatenate([dp.emb_multi, emb_multi.astype(np.float32)], axis=1)
+        if dp.emb_q is not None:
+            n_gnn = emb_multi.shape[0]
+            cat = (
+                np.concatenate([emb] + [emb_multi[i] for i in range(n_gnn)], axis=1)
+                if n_gnn
+                else emb
+            )
+            dp.emb_q = np.concatenate([dp.emb_q, quantize_data(cat)])
+        if dp.label_hash is not None:
+            assert path_labels is not None, "quantized delta needs path labels"
+            dp.label_hash = np.concatenate([dp.label_hash, hash_labels(path_labels)])
+
+    # ------------------------------------------------------------------
+    def live_rows(self, mi: int, rows: np.ndarray) -> np.ndarray:
+        """Filter a main-index probe result through the tombstone mask."""
+        dp = self.parts[mi]
+        if rows.size == 0 or dp.n_tomb == 0:
+            return rows
+        return rows[~dp.tombstone[rows]]
+
+    def needs_compaction(self, mi: int, index: PackedIndex, frac: float, min_rows: int) -> bool:
+        return self.parts[mi].pressure > max(min_rows, int(frac * max(index.n_paths, 1)))
+
+    def compact_partition(self, mi: int, index: PackedIndex, path_labels: np.ndarray | None) -> PackedIndex:
+        """Re-sort/re-pack ONE partition: live main rows + buffer rows go
+        through the ordinary ``build_index`` (and ``attach_groups`` when
+        the source index carried the GNN-PGE sidecar); the delta state
+        resets.  Other partitions are untouched."""
+        dp = self.parts[mi]
+        live = ~dp.tombstone
+        paths = np.concatenate([index.paths[live], dp.paths])
+        emb = np.concatenate([index.emb[live], dp.emb])
+        emb0 = np.concatenate([index.emb0[live], dp.emb0])
+        emb_multi = np.concatenate([index.emb_multi[:, live], dp.emb_multi], axis=1)
+        new_index = build_index(
+            paths,
+            emb,
+            emb0,
+            emb_multi,
+            block_size=index.block_size,
+            fanout=index.fanout,
+            quantize=index.emb_q is not None,
+            path_labels=path_labels[paths] if path_labels is not None and index.emb_q is not None else None,
+        )
+        if index.groups is not None:
+            attach_groups(new_index, index.groups.group_size)
+        self.parts[mi] = _empty_delta(new_index)
+        self.n_compactions += 1
+        return new_index
+
+    def reset_part(self, mi: int, index: PackedIndex) -> None:
+        self.parts[mi] = _empty_delta(index)
+
+    # ------------------------------------------------------------------
+    def any_rows(self) -> bool:
+        return any(dp.n_rows for dp in self.parts)
+
+    def any_state(self) -> bool:
+        return any(dp.n_rows or dp.tombstone.any() for dp in self.parts)
+
+    def stats(self) -> dict:
+        return {
+            "epoch": self.epoch,
+            "delta_rows": int(sum(dp.n_rows for dp in self.parts)),
+            "tombstones": int(sum(dp.n_tombstones for dp in self.parts)),
+            "delta_bytes": int(sum(dp.nbytes() for dp in self.parts)),
+            "n_compactions": self.n_compactions,
+        }
+
+
+# --------------------------------------------------------------------------
+# Delta-side probe: brute (query, buffer-row) pairs, no forest
+# --------------------------------------------------------------------------
+
+
+def probe_delta_multi(
+    items: list,
+    eps: float = 1e-6,
+    use_pallas: bool = True,
+):
+    """Exact candidate rows of several partitions' delta buffers at once.
+
+    ``items``: list of ``(delta, q_emb, q_emb0, q_multi, q_label_hash)``
+    — the same layout ``query_index_batch_multi`` takes, with the
+    ``PartitionDelta`` standing in for the index.  Every (query, row)
+    pair is checked (the buffer is small by construction, so brute pairs
+    beat building a forest); pairs ride the conservative int8 +
+    label-hash pre-filter and settle in ONE fused
+    ``dominance_scan_pairs`` call across all partitions — the identical
+    Lemma 4.1 + 4.2 predicates of the main-index leaf scan, so delta
+    rows survive exactly when a rebuilt index would keep them.
+
+    Returns a list (per item) of lists (per query) of int64 row arrays
+    into each delta buffer.
+    """
+    packs = []
+    for delta, q_emb, q_emb0, q_multi, q_label_hash in items:
+        q_emb = np.asarray(q_emb, np.float32)
+        q_emb0 = np.asarray(q_emb0, np.float32)
+        Q = q_emb.shape[0]
+        B = delta.n_rows
+        if q_multi is None:
+            q_multi = np.zeros((delta.emb_multi.shape[0], Q, q_emb.shape[1]), np.float32)
+        if B == 0 or Q == 0:
+            packs.append({"Q": Q, "empty": True})
+            continue
+        q_ids = np.repeat(np.arange(Q, dtype=np.int64), B)
+        rows = np.tile(np.arange(B, dtype=np.int64), Q)
+        PAIR_COUNTERS["leaf_pairs"] += int(rows.size)
+        rows, q_ids = _prefilter_pairs(delta, rows, q_ids, q_emb, q_multi, q_label_hash)
+        pack = {"Q": Q, "empty": False, "rows": rows, "q_ids": q_ids}
+        if use_pallas:
+            pack["ops"] = _gather_pair_operands(delta, rows, q_ids, q_emb, q_emb0, q_multi)
+        else:
+            pack["keep"] = _pairs_keep_mask_numpy_lazy(
+                delta, rows, q_ids, q_emb, q_emb0, q_multi, eps
+            )
+        packs.append(pack)
+    if use_pallas:
+        live = [p for p in packs if not p["empty"] and p["rows"].size]
+        if live:
+            cat = [np.concatenate([p["ops"][k] for p in live]) for k in range(4)]
+            keep_all = _pairs_keep_mask(*cat, eps, use_pallas=True)
+            offs = np.cumsum([0] + [p["rows"].size for p in live])
+            for p, a, b in zip(live, offs[:-1], offs[1:]):
+                p["keep"] = keep_all[a:b]
+    results = []
+    for p in packs:
+        Q = p["Q"]
+        if p["empty"]:
+            results.append([np.zeros((0,), np.int64) for _ in range(Q)])
+            continue
+        keep = p.get("keep")
+        if keep is None:  # pallas mode with zero surviving pairs
+            keep = np.zeros((0,), bool)
+        rows = p["rows"][keep]
+        counts = np.bincount(p["q_ids"][keep], minlength=Q)
+        results.append(np.split(rows.astype(np.int64), np.cumsum(counts)[:-1]))
+    return results

@@ -23,10 +23,19 @@ per stage instead of Python loops over (query × partition × path):
 ``online_impl="scalar"`` keeps the original per-(partition, path) loop
 as the exactness cross-check and the benchmark baseline
 (benchmarks/bench_online_batch.py measures one against the other).
+
+Live serving (§delta): ``apply_updates`` absorbs online edge/vertex
+insertions and deletions without an offline rebuild — affected paths
+re-embed with the frozen partition GNNs into per-partition delta
+buffers (core/delta.py), probes become ``main ∪ delta − tombstones``,
+over-full partitions compact (and elastically re-stack) individually,
+and the signature-keyed result cache (serve/cache.py, ``cache=True``)
+serves repeat queries with partition-scoped invalidation.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 
 import jax
@@ -34,6 +43,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graphs import Graph, Partitioning, expanded_partition, partition_graph
+from .delta import (
+    DeltaIndex,
+    apply_graph_update,
+    l_hop_reach,
+    paths_touching,
+    probe_delta_multi,
+)
 from .encoder import EncoderConfig, make_encoder
 from .grouping import attach_groups
 from .index import (
@@ -90,6 +106,18 @@ class GnnPeConfig:
     # is an emulation, ~25× slower than XLA on the same work);
     # True forces the kernel (integration tests), False forces NumPy.
     use_pallas_scan: bool | None = None
+    # live serving (§delta): signature-keyed result cache with partition-
+    # scoped invalidation (serve/cache.py)
+    cache: bool = False
+    cache_capacity: int = 2048
+    # compact a partition when its delta pressure (buffer rows + tombstones)
+    # exceeds max(delta_compact_min, delta_compact_frac · main paths)
+    delta_compact_frac: float = 0.25
+    delta_compact_min: int = 512
+    # cap on the stacked probe's cross-partition leaf member-expansion —
+    # pathological partitions stream through the fused scan in bounded
+    # chunks instead of materializing every (partition, query, row) pair
+    stacked_leaf_pair_cap: int = 1 << 21
     seed: int = 0
     train: TrainConfig = dataclasses.field(default_factory=TrainConfig)
 
@@ -109,6 +137,14 @@ class PartitionModel:
     index: PackedIndex
     train_epochs: int = 0
     n_fallback: int = 0
+    # live-update bookkeeping: partition id in the engine's Partitioning,
+    # and the frozen all-ones fallback vertex ids (main + per multi-GNN) —
+    # incremental re-embedding must reapply them bit-identically
+    part_id: int = -1
+    fallback_vids: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64)
+    )
+    fallback_vids_multi: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -121,6 +157,7 @@ class QueryStats:
     filter_time: float = 0.0
     join_time: float = 0.0
     n_matches: int = 0
+    cache_hit: bool = False
 
 
 class GnnPeEngine:
@@ -135,6 +172,16 @@ class GnnPeEngine:
         self._stacked_cache = None  # per-partition params stacked for vmap
         self._stacked_probe = None  # dist.probe.StackedProbe over the indexes
         self._plan_cache: dict = {}  # canonical query key -> canonical QueryPlan
+        # live serving (§delta): per-partition tombstones + delta buffers,
+        # the index epoch, and the signature-keyed result cache
+        self.delta: DeltaIndex | None = None
+        self.epoch: int = 0
+        self._emb_fingerprint: bytes = b""
+        self._result_cache = None
+        if cfg.cache:
+            from ..serve.cache import ResultCache  # lazy: avoids core↔serve cycle
+
+            self._result_cache = ResultCache(cfg.cache_capacity)
 
     @property
     def encoder(self):
@@ -233,6 +280,7 @@ class GnnPeEngine:
             if cfg.index_kind == "grouped":
                 attach_groups(index, cfg.group_size)
             index_time += time.perf_counter() - t3
+            vset64 = vset.astype(np.int64)
             self.models.append(
                 PartitionModel(
                     members=members,
@@ -246,6 +294,16 @@ class GnnPeEngine:
                     index=index,
                     train_epochs=res.epochs,
                     n_fallback=len(res.fallback_vertices),
+                    part_id=j,
+                    fallback_vids=vset64[np.asarray(res.fallback_vertices, np.int64)]
+                    if len(res.fallback_vertices)
+                    else np.zeros(0, np.int64),
+                    fallback_vids_multi=[
+                        vset64[np.asarray(r.fallback_vertices, np.int64)]
+                        if len(r.fallback_vertices)
+                        else np.zeros(0, np.int64)
+                        for r in multi_res
+                    ],
                 )
             )
         self.offline_stats = {
@@ -264,6 +322,15 @@ class GnnPeEngine:
             "edge_cut": int(self.partitioning.edge_cut(g)),
         }
         self._stacked_probe = None  # indexes changed; restack lazily
+        self.delta = DeltaIndex([m.index for m in self.models]) if self.models else None
+        self.epoch = 0
+        self._emb_fingerprint = self._content_fingerprint()
+        # dr plans probed the PREVIOUS build's indexes; the fingerprint alone
+        # is a coarse content digest, so drop the whole plan cache (deg plans
+        # are query-only and re-cache cheaply)
+        self._plan_cache.clear()
+        if self._result_cache is not None:
+            self._result_cache.clear()
         if cfg.probe_impl == "stacked" and self.models:
             self.stacked_probe()  # eager: pay stacking offline, report bytes
         return self
@@ -276,9 +343,28 @@ class GnnPeEngine:
             assert self.models, "call build() first"
             from ..dist.probe import StackedProbe  # lazy: avoids core↔dist cycle
 
-            self._stacked_probe = StackedProbe([m.index for m in self.models])
+            self._stacked_probe = StackedProbe(
+                [m.index for m in self.models],
+                leaf_pair_cap=self.cfg.stacked_leaf_pair_cap,
+            )
             self.offline_stats.update(self._stacked_probe.stacked.padding_stats())
         return self._stacked_probe
+
+    def _content_fingerprint(self) -> bytes:
+        """Digest identifying the current index/embedding content — the
+        "embedding fingerprint" the dr-plan cache keys on.  Seeded from
+        the build, then chained through every update epoch, so a dr plan
+        cached against one index state can never serve another."""
+        h = hashlib.blake2b(digest_size=12)
+        h.update(np.int64(self.cfg.seed).tobytes())
+        h.update(np.asarray([m.index.n_paths for m in self.models], np.int64).tobytes())
+        return h.digest()
+
+    def _bump_fingerprint(self, token: bytes) -> None:
+        h = hashlib.blake2b(digest_size=12)
+        h.update(self._emb_fingerprint)
+        h.update(token)
+        self._emb_fingerprint = h.digest()
 
     def _encoder_cfg(self) -> EncoderConfig:
         cfg = self.cfg
@@ -322,6 +408,329 @@ class GnnPeEngine:
         return node_emb, node_emb0
 
     # ------------------------------------------------------------------
+    # Live updates (§delta): incremental maintenance with frozen GNNs
+    # ------------------------------------------------------------------
+    def _grow_model_arrays(self, model: PartitionModel, n_vertices: int) -> None:
+        """Extend the per-vertex embedding tables for appended vertices."""
+        cur = model.node_emb.shape[0]
+        if cur >= n_vertices:
+            return
+        pad = n_vertices - cur
+        d = model.node_emb.shape[1]
+        model.node_emb = np.concatenate([model.node_emb, np.zeros((pad, d), np.float32)])
+        model.node_emb0 = np.concatenate([model.node_emb0, np.zeros((pad, d), np.float32)])
+        model.node_emb_multi = np.concatenate(
+            [model.node_emb_multi, np.zeros((model.node_emb_multi.shape[0], pad, d), np.float32)],
+            axis=1,
+        )
+
+    def _refresh_node_embeddings(self, model: PartitionModel, vids: np.ndarray) -> None:
+        """Re-embed ``vids`` with the partition's FROZEN GNNs (paper's
+        incremental-maintenance rule).  Star embedding is row-independent,
+        so the refreshed rows are bit-identical to what a full-batch
+        rebuild over the updated graph would compute (the delta-vs-rebuild
+        equivalence rests on this; see tests/test_delta_updates.py).
+
+        The star batch pads to a power-of-two bucket (repeating the first
+        vertex) so the jitted encoder sees a handful of recurring shapes
+        instead of retracing on every touched-set size — without this,
+        XLA recompilation dominates the whole update path."""
+        g = self.graph
+        cfg = self.cfg
+        enc = self.encoder
+        n = vids.size
+        n_pad = 8
+        while n_pad < n:
+            n_pad *= 2
+        pad_vids = (
+            np.concatenate([vids, np.full(n_pad - n, vids[0], np.int64)])
+            if n_pad != n
+            else vids
+        )
+        stars = build_star_tensors(g, pad_vids, cfg.theta)
+        o = np.asarray(
+            enc.embed_stars(
+                model.params,
+                np.asarray(stars.center_labels),
+                np.asarray(stars.leaf_labels),
+                np.asarray(stars.leaf_mask),
+            )
+        ).astype(np.float32)[:n]
+        o0 = np.asarray(enc.embed_isolated(model.params, np.asarray(stars.center_labels))).astype(
+            np.float32
+        )[:n]
+        overflow = stars.overflow[:n]
+        o[overflow] = 1.0
+        o[np.isin(vids, model.fallback_vids)] = 1.0
+        model.node_emb[vids] = o
+        model.node_emb0[vids] = o0
+        for i in range(cfg.n_multi):
+            relab_c = self.label_perms[i][g.labels[pad_vids]].astype(np.int32)
+            relab_l = self._relabel_leaves(stars.leaf_labels, stars.leaf_mask, i)
+            oi = np.asarray(
+                enc.embed_stars(
+                    model.multi_params[i], relab_c, np.asarray(relab_l), np.asarray(stars.leaf_mask)
+                )
+            ).astype(np.float32)[:n]
+            oi[overflow] = 1.0
+            oi[np.isin(vids, model.fallback_vids_multi[i])] = 1.0
+            model.node_emb_multi[i][vids] = oi
+
+    def _assign_new_vertices(self, new_ids: np.ndarray) -> dict:
+        """Place appended vertices into modeled partitions (majority of
+        already-assigned neighbors, else the smallest modeled partition)
+        and extend ``self.partitioning``.  Returns part_id → new members."""
+        g = self.graph
+        assignment = np.concatenate(
+            [self.partitioning.assignment, np.full(new_ids.size, -1, np.int32)]
+        )
+        sizes = np.bincount(
+            self.partitioning.assignment, minlength=self.partitioning.n_parts
+        ).astype(np.int64)
+        modeled = np.asarray([m.part_id for m in self.models], np.int64)
+        new_members: dict[int, list] = {}
+        for v in new_ids:
+            nbr_parts = assignment[g.neighbors(int(v))]
+            nbr_parts = nbr_parts[nbr_parts >= 0]
+            pick = -1
+            if nbr_parts.size:
+                counts = np.bincount(nbr_parts, minlength=self.partitioning.n_parts)
+                best = int(np.argmax(counts[modeled]))
+                if counts[modeled][best] > 0:
+                    pick = int(modeled[best])
+            if pick < 0:
+                pick = int(modeled[int(np.argmin(sizes[modeled]))])
+            assignment[v] = pick
+            sizes[pick] += 1
+            new_members.setdefault(pick, []).append(int(v))
+        self.partitioning = Partitioning(assignment, self.partitioning.n_parts)
+        return new_members
+
+    def apply_updates(self, updates, strategy: str = "delta") -> dict:
+        """Absorb a batch of online graph edits (one index epoch).
+
+        ``updates`` is one ``GraphUpdate`` or a list applied atomically.
+        ``strategy="delta"`` (default) runs the incremental path: touched
+        vertices re-embed under the frozen partition GNNs, affected paths
+        land in per-partition delta buffers, dead main rows tombstone,
+        over-full partitions compact (re-sort/re-pack just themselves and,
+        for ``probe_impl="stacked"``, re-stack only their shard slot).
+        ``strategy="rebuild"`` applies the same graph change but then
+        re-embeds/re-enumerates/re-packs EVERY partition from scratch —
+        the offline baseline benchmarks/bench_updates.py measures against.
+        Matches after either strategy are identical at every epoch.
+
+        Returns a summary dict (epoch, mutated/compacted partitions,
+        delta/tombstone row counts).
+        """
+        assert self.graph is not None, "call build() first"
+        if strategy not in ("delta", "rebuild"):
+            raise ValueError(f"unknown update strategy {strategy!r}; use 'delta' or 'rebuild'")
+        if not self.models:
+            raise RuntimeError("apply_updates needs at least one built partition model")
+        cfg = self.cfg
+        ups = list(updates) if isinstance(updates, (list, tuple)) else [updates]
+        g = self.graph
+        n_old = g.n_vertices
+        touched_parts = []
+        for u in ups:
+            lab = np.asarray(u.add_vertex_labels, np.int64).reshape(-1)
+            if lab.size and (lab.min() < 0 or lab.max() >= self.n_labels):
+                raise ValueError(
+                    f"new vertex labels must lie in [0, {self.n_labels}) — "
+                    "the label vocabulary is frozen at build time"
+                )
+            g, t = apply_graph_update(g, u)
+            touched_parts.append(t)
+        touched = (
+            np.unique(np.concatenate(touched_parts)) if touched_parts else np.zeros(0, np.int64)
+        )
+        self.graph = g
+        self.epoch += 1
+        new_ids = np.arange(n_old, g.n_vertices, dtype=np.int64)
+        new_members = self._assign_new_vertices(new_ids) if new_ids.size else {}
+        for model in self.models:
+            add = new_members.get(model.part_id)
+            if add:
+                model.members = np.sort(
+                    np.concatenate([model.members.astype(np.int64), np.asarray(add, np.int64)])
+                ).astype(np.int32)
+
+        if strategy == "rebuild":
+            self.rebuild_indexes()
+            self._bump_fingerprint(b"rebuild" + np.int64(self.epoch).tobytes())
+            if self._result_cache is not None:
+                self._result_cache.clear()
+            return {
+                "epoch": self.epoch,
+                "strategy": "rebuild",
+                "touched": int(touched.size),
+                "mutated": list(range(len(self.models))),
+                "compacted": [],
+            }
+
+        if self.delta is None:
+            self.delta = DeltaIndex([m.index for m in self.models])
+        delta = self.delta
+        L = cfg.path_length
+        reach = l_hop_reach(g, touched, L) if touched.size else np.zeros(0, np.int64)
+        mutated: dict[int, dict] = {}
+        compacted: list[int] = []
+        n_delta_rows = 0
+        n_tombstoned = 0
+        for mi, model in enumerate(self.models):
+            old_vset = model.vertex_set.astype(np.int64)
+            touched_near = np.intersect1d(touched, old_vset, assume_unique=True)
+            gained = bool(new_members.get(model.part_id))
+            if touched_near.size == 0 and not gained:
+                continue  # no touched vertex can reach this partition (see delta.py)
+            new_vset = expanded_partition(g, self.partitioning, model.part_id, L).astype(np.int64)
+            self._grow_model_arrays(model, g.n_vertices)
+            need = np.union1d(
+                np.setdiff1d(new_vset, old_vset, assume_unique=True),
+                np.intersect1d(touched, new_vset, assume_unique=True),
+            )
+            if need.size:
+                self._refresh_node_embeddings(model, need)
+            model.vertex_set = new_vset.astype(np.int32)
+            n_tomb, dropped = delta.tombstone_touched(mi, model.index, touched)
+            n_tombstoned += n_tomb
+            roots = np.intersect1d(model.members.astype(np.int64), reach, assume_unique=True)
+            paths = enumerate_paths(g, roots.astype(np.int32), L)
+            if paths.shape[0]:
+                paths = paths[paths_touching(paths, touched)]
+            if paths.shape[0]:
+                emb = concat_path_embeddings(paths, model.node_emb)
+                emb0 = concat_path_embeddings(paths, model.node_emb0)
+                emb_multi = (
+                    np.stack(
+                        [
+                            concat_path_embeddings(paths, model.node_emb_multi[i])
+                            for i in range(cfg.n_multi)
+                        ]
+                    )
+                    if cfg.n_multi
+                    else np.zeros((0, paths.shape[0], emb.shape[1]), np.float32)
+                )
+                delta.append(mi, paths, emb, emb0, emb_multi, path_labels=g.labels[paths])
+                n_delta_rows += paths.shape[0]
+            if n_tomb or dropped or paths.shape[0]:
+                mutated[mi] = {
+                    "deleted": bool(n_tomb or dropped),
+                    "inserted_hashes": np.unique(hash_labels(g.labels[paths]))
+                    if paths.shape[0]
+                    else np.zeros(0, np.int64),
+                }
+            if delta.needs_compaction(mi, model.index, cfg.delta_compact_frac, cfg.delta_compact_min):
+                model.index = delta.compact_partition(
+                    mi, model.index, g.labels if cfg.quantize_index else None
+                )
+                compacted.append(mi)
+        # elastic re-stacking: only the compacted partitions' shard slots
+        if self._stacked_probe is not None and compacted:
+            for mi in compacted:
+                if not self._stacked_probe.update_slot(mi, self.models[mi].index):
+                    # the partition outgrew its slot's level layout — the
+                    # (rare) full restack happens lazily on the next probe
+                    self._stacked_probe = None
+                    break
+            if self._stacked_probe is not None:
+                self.offline_stats.update(self._stacked_probe.stacked.padding_stats())
+        delta.epoch = self.epoch
+        if mutated:  # a no-op epoch leaves index content (and dr plans) intact
+            self._bump_fingerprint(
+                b"delta"
+                + np.int64(self.epoch).tobytes()
+                + np.asarray(sorted(mutated), np.int64).tobytes()
+            )
+            if self._result_cache is not None:
+                self._result_cache.invalidate(mutated)
+        return {
+            "epoch": self.epoch,
+            "strategy": "delta",
+            "touched": int(touched.size),
+            "mutated": sorted(mutated),
+            "compacted": compacted,
+            "delta_rows_added": n_delta_rows,
+            "rows_tombstoned": n_tombstoned,
+            **delta.stats(),
+        }
+
+    def rebuild_indexes(self) -> "GnnPeEngine":
+        """From-scratch re-embed + re-enumerate + re-pack of EVERY
+        partition with the frozen per-partition GNNs.
+
+        This is the offline baseline the delta path is measured against
+        (benchmarks/bench_updates.py) and the equivalence oracle of the
+        update property tests — a full ``build()`` would also re-train,
+        and retrieval equality is only defined under frozen params.
+        """
+        assert self.graph is not None, "call build() first"
+        g = self.graph
+        cfg = self.cfg
+        for mi, model in enumerate(self.models):
+            vset = expanded_partition(g, self.partitioning, model.part_id, cfg.path_length)
+            stars = build_star_tensors(g, vset, cfg.theta)
+            fb = np.nonzero(np.isin(vset, model.fallback_vids))[0]
+            node_emb, node_emb0 = self._node_embeddings(g, vset, stars, model.params, fb)
+            node_emb_multi = np.zeros((cfg.n_multi, g.n_vertices, cfg.emb_dim), np.float32)
+            for i in range(cfg.n_multi):
+                stars_i = dataclasses.replace(
+                    stars,
+                    center_labels=self.label_perms[i][g.labels][vset].astype(np.int32),
+                    leaf_labels=self._relabel_leaves(stars.leaf_labels, stars.leaf_mask, i),
+                )
+                fb_i = np.nonzero(np.isin(vset, model.fallback_vids_multi[i]))[0]
+                emb_i, _ = self._node_embeddings(g, vset, stars_i, model.multi_params[i], fb_i)
+                node_emb_multi[i] = emb_i
+            paths = enumerate_paths(g, model.members, cfg.path_length)
+            emb = concat_path_embeddings(paths, node_emb)
+            emb0 = concat_path_embeddings(paths, node_emb0)
+            emb_multi = (
+                np.stack(
+                    [concat_path_embeddings(paths, node_emb_multi[i]) for i in range(cfg.n_multi)]
+                )
+                if cfg.n_multi
+                else None
+            )
+            index = build_index(
+                paths, emb, emb0, emb_multi,
+                block_size=cfg.block_size, fanout=cfg.index_fanout,
+                quantize=cfg.quantize_index,
+                path_labels=g.labels[paths] if cfg.quantize_index else None,
+            )
+            if cfg.index_kind == "grouped":
+                attach_groups(index, cfg.group_size)
+            model.node_emb = node_emb
+            model.node_emb0 = node_emb0
+            model.node_emb_multi = node_emb_multi
+            model.vertex_set = vset
+            model.index = index
+            if self.delta is not None:
+                self.delta.reset_part(mi, index)
+        self.offline_stats["n_paths"] = int(sum(m.index.n_paths for m in self.models))
+        self.offline_stats["index_bytes"] = int(sum(m.index.nbytes() for m in self.models))
+        self._stacked_probe = None
+        if cfg.probe_impl == "stacked" and self.models:
+            self.stacked_probe()
+        return self
+
+    def delta_stats(self) -> dict:
+        """Current delta/tombstone pressure + epoch (live-serving telemetry)."""
+        base = {"epoch": self.epoch}
+        if self.delta is not None:
+            base.update(self.delta.stats())
+        if self._result_cache is not None:
+            base["cache"] = self._result_cache.stats.as_dict()
+        return base
+
+    def _live_rows(self, mi: int, rows: np.ndarray) -> np.ndarray:
+        """Drop tombstoned main-index rows from a probe result."""
+        if self.delta is None:
+            return rows
+        return self.delta.live_rows(mi, rows)
+
+    # ------------------------------------------------------------------
     # Online matching (Alg. 1 lines 6-11, Alg. 3)
     # ------------------------------------------------------------------
     def _query_node_embeddings(self, q: Graph, model: PartitionModel):
@@ -355,36 +764,14 @@ class GnnPeEngine:
             o_multi[i] = oi
         return o, o0, o_multi
 
-    def _plan_cached(
-        self, q: Graph, weight_fn=None, group_size: int = 1
-    ) -> QueryPlan:
-        """``plan_query`` with a canonical-signature cache (deg plans only).
-
-        Plans under the default ``weight="deg"`` cost model depend only
-        on the query's labeled structure, so repeated (even relabeled-
-        isomorphic) queries in ``match_many`` batches reuse one greedy
-        planner run: the plan is cached in canonical vertex ids keyed by
-        ``canonical_form``'s graph bytes and mapped back through each
-        query's own ordering.  ``dr`` plans weight by per-query index
-        probes and always re-plan.
-        """
-        cfg = self.cfg
-        if weight_fn is not None or cfg.plan_weight != "deg":
-            return plan_query(
-                q, cfg.path_length,
-                strategy=cfg.plan_strategy, weight=cfg.plan_weight,
-                weight_fn=weight_fn, seed=cfg.seed, group_size=group_size,
-            )
-        perm, key = canonical_form(q)
-        full_key = (key, cfg.path_length, cfg.plan_strategy, cfg.seed)
+    def _plan_cache_get(self, q: Graph, full_key, perm) -> QueryPlan | None:
         hit = self._plan_cache.get(full_key)
-        if hit is not None:
-            paths = [tuple(int(perm[v]) for v in p) for p in hit.paths]
-            return QueryPlan(paths=paths, cost=hit.cost, strategy=hit.strategy)
-        plan = plan_query(
-            q, cfg.path_length,
-            strategy=cfg.plan_strategy, weight="deg", seed=cfg.seed,
-        )
+        if hit is None:
+            return None
+        paths = [tuple(int(perm[v]) for v in p) for p in hit.paths]
+        return QueryPlan(paths=paths, cost=hit.cost, strategy=hit.strategy)
+
+    def _plan_cache_put(self, q: Graph, full_key, perm, plan: QueryPlan) -> None:
         inv = np.empty(q.n_vertices, np.int64)
         inv[perm] = np.arange(q.n_vertices)
         while len(self._plan_cache) >= _PLAN_CACHE_MAX:
@@ -394,6 +781,68 @@ class GnnPeEngine:
             cost=plan.cost,
             strategy=plan.strategy,
         )
+
+    def _dr_plan_key(self, q: Graph, group_size: int):
+        """Cache key for ``weight="dr"`` plans: (canonical signature,
+        embedding fingerprint) — dr weights are per-query index probe
+        counts, invariant under the canonical relabeling but NOT under
+        index mutation, so the fingerprint retires them at every epoch."""
+        cfg = self.cfg
+        perm, key = canonical_form(q)
+        return perm, (
+            key, cfg.path_length, cfg.plan_strategy, cfg.seed,
+            "dr", self._emb_fingerprint, group_size,
+        )
+
+    def _dr_plan_peek(self, q: Graph, group_size: int) -> QueryPlan | None:
+        """Cached dr plan for ``q`` at the current index epoch, or None.
+        A hit lets ``match_many`` skip the candidate-path cost probes."""
+        perm, full_key = self._dr_plan_key(q, group_size)
+        return self._plan_cache_get(q, full_key, perm)
+
+    def _plan_cached(
+        self, q: Graph, weight_fn=None, group_size: int = 1
+    ) -> QueryPlan:
+        """``plan_query`` with a canonical-signature cache.
+
+        Plans under the default ``weight="deg"`` cost model depend only
+        on the query's labeled structure, so repeated (even relabeled-
+        isomorphic) queries in ``match_many`` batches reuse one greedy
+        planner run: the plan is cached in canonical vertex ids keyed by
+        ``canonical_form``'s graph bytes and mapped back through each
+        query's own ordering.  ``dr`` plans weight by per-query index
+        probes, so they cache under (signature, embedding fingerprint)
+        — see ``_dr_plan_key`` — and re-plan only after index mutations.
+        """
+        cfg = self.cfg
+        if weight_fn is not None and cfg.plan_weight == "dr":
+            perm, full_key = self._dr_plan_key(q, group_size)
+            hit = self._plan_cache_get(q, full_key, perm)
+            if hit is not None:
+                return hit
+            plan = plan_query(
+                q, cfg.path_length,
+                strategy=cfg.plan_strategy, weight="dr",
+                weight_fn=weight_fn, seed=cfg.seed, group_size=group_size,
+            )
+            self._plan_cache_put(q, full_key, perm, plan)
+            return plan
+        if weight_fn is not None or cfg.plan_weight != "deg":
+            return plan_query(
+                q, cfg.path_length,
+                strategy=cfg.plan_strategy, weight=cfg.plan_weight,
+                weight_fn=weight_fn, seed=cfg.seed, group_size=group_size,
+            )
+        perm, key = canonical_form(q)
+        full_key = (key, cfg.path_length, cfg.plan_strategy, cfg.seed)
+        hit = self._plan_cache_get(q, full_key, perm)
+        if hit is not None:
+            return hit
+        plan = plan_query(
+            q, cfg.path_length,
+            strategy=cfg.plan_strategy, weight="deg", seed=cfg.seed,
+        )
+        self._plan_cache_put(q, full_key, perm, plan)
         return plan
 
     def match(
@@ -429,8 +878,10 @@ class GnnPeEngine:
         # per-partition query embeddings (needed by both DR planning and retrieval)
         q_embs = [self._query_node_embeddings(q, m) for m in self.models]
         probe_memo: dict = {}
+        delta = self.delta
 
-        def _retrieve(mi: int, p: tuple) -> np.ndarray:
+        def _retrieve(mi: int, p: tuple):
+            """→ (live main rows, delta-buffer rows) for one (partition, path)."""
             key = (mi, p)
             if key in probe_memo:
                 return probe_memo[key]
@@ -446,8 +897,22 @@ class GnnPeEngine:
 
                 qh = int(hash_labels(q.labels[pv][None, :])[0])
             rows = query_index(model.index, q_emb, q_emb0, q_multi, q_label_hash=qh)
-            probe_memo[key] = rows
-            return rows
+            rows = self._live_rows(mi, rows)
+            drows = np.zeros((0,), np.int64)
+            if delta is not None and delta.parts[mi].n_rows:
+                out = probe_delta_multi(
+                    [(
+                        delta.parts[mi],
+                        q_emb[None, :],
+                        q_emb0[None, :],
+                        q_multi[:, None, :] if q_multi is not None else None,
+                        np.asarray([qh]) if qh is not None else None,
+                    )],
+                    use_pallas=False,
+                )
+                drows = out[0][0]
+            probe_memo[key] = (rows, drows)
+            return rows, drows
 
         weight_fn = None
         if cfg.plan_weight == "dr":
@@ -456,9 +921,9 @@ class GnnPeEngine:
             def weight_fn(p):
                 return float(
                     sum(
-                        _retrieve(mi, p).size
+                        sum(r.size for r in _retrieve(mi, p))
                         for mi in range(len(self.models))
-                        if self.models[mi].index.n_paths
+                        if (self.models[mi].index.n_paths or (delta is not None and delta.parts[mi].n_rows))
                         and len(p) == self.models[mi].index.paths.shape[1]
                     )
                 )
@@ -469,15 +934,21 @@ class GnnPeEngine:
         candidates = [[] for _ in plan.paths]
         total_paths = 0
         for mi, model in enumerate(self.models):
-            if model.index.n_paths == 0:
+            dp = delta.parts[mi] if delta is not None else None
+            n_live = model.index.n_paths + (
+                dp.n_rows - dp.n_tombstones if dp is not None else 0
+            )
+            if n_live <= 0:
                 continue
-            total_paths += model.index.n_paths
+            total_paths += n_live
             for pi, p in enumerate(plan.paths):
                 if len(p) != model.index.paths.shape[1]:
                     continue  # length-mismatched fallback path
-                rows = _retrieve(mi, p)
+                rows, drows = _retrieve(mi, p)
                 if rows.size:
                     candidates[pi].append(model.index.paths[rows])
+                if drows.size:
+                    candidates[pi].append(dp.paths[drows])
         cand_arrays = []
         cand_total = 0
         for pi, parts in enumerate(candidates):
@@ -572,6 +1043,7 @@ class GnnPeEngine:
         use_groups: bool = False,
         stats_memo: dict | None = None,
         probe_impl: str | None = None,
+        delta_memo: dict | None = None,
     ) -> None:
         """One fused index probe for many (query, path) pairs × partitions.
 
@@ -591,6 +1063,12 @@ class GnnPeEngine:
         index (one vmapped/sharded descent over ALL partitions,
         dist/probe.py) instead of looping per-partition ``PackedIndex``
         objects — memo entries are identical either way.
+
+        With live updates pending (§delta), main-index results are
+        filtered through the tombstone masks and the per-partition delta
+        buffers are brute-scanned into ``delta_memo[(mi, qi, path)]`` —
+        together the memos hold exactly the candidate rows a rebuilt
+        index would return.
         """
         cfg = self.cfg
         cat, spans = q_embs
@@ -616,69 +1094,93 @@ class GnnPeEngine:
             if cfg.use_pallas_scan is not None
             else jax.default_backend() == "tpu"
         )
+        def query_tensors(mi, gidx, B):
+            """(q_emb, q_emb0, q_multi) for partition ``mi``'s probe batch."""
+            o, o0, om = cat[mi]
+            return (
+                o[gidx].reshape(B, -1),
+                o0[gidx].reshape(B, -1),
+                om[:, gidx].reshape(cfg.n_multi, B, -1) if cfg.n_multi else None,
+            )
+
         impl = probe_impl or cfg.probe_impl
         if impl == "stacked" and self.models:
             # one vmapped (and device-sharded) descent over EVERY partition
-            probe = self.stacked_probe()
             L = self.models[0].index.paths.shape[1]
-            if L not in layouts:
-                return
-            sel, gidx, qh = layouts[L]
-            B = len(sel)
-            m = len(self.models)
-            q_emb = np.stack([cat[mi][0][gidx].reshape(B, -1) for mi in range(m)])
-            q_emb0 = np.stack([cat[mi][1][gidx].reshape(B, -1) for mi in range(m)])
-            q_multi = (
-                np.stack(
-                    [cat[mi][2][:, gidx].reshape(cfg.n_multi, B, -1) for mi in range(m)],
-                    axis=1,
+            if L in layouts:
+                probe = self.stacked_probe()
+                sel, gidx, qh = layouts[L]
+                B = len(sel)
+                m = len(self.models)
+                per_part = [query_tensors(mi, gidx, B) for mi in range(m)]
+                q_emb = np.stack([t[0] for t in per_part])
+                q_emb0 = np.stack([t[1] for t in per_part])
+                q_multi = (
+                    np.stack([t[2] for t in per_part], axis=1) if cfg.n_multi else None
                 )
-                if cfg.n_multi
-                else None
-            )
-            out = probe.probe(
-                q_emb, q_emb0, q_multi, q_label_hash=qh,
-                use_groups=use_groups, use_pallas=use_pallas,
-                return_stats=stats_memo is not None,
-            )
-            results, stats = out if stats_memo is not None else (out, None)
-            for mi in range(m):
-                for b, (qi, p) in enumerate(sel):
-                    memo[(mi, qi, p)] = results[mi][b]
-                    if stats_memo is not None:
-                        stats_memo[(mi, qi, p)] = stats[mi][b]
+                out = probe.probe(
+                    q_emb, q_emb0, q_multi, q_label_hash=qh,
+                    use_groups=use_groups, use_pallas=use_pallas,
+                    return_stats=stats_memo is not None,
+                )
+                results, stats = out if stats_memo is not None else (out, None)
+                for mi in range(m):
+                    for b, (qi, p) in enumerate(sel):
+                        memo[(mi, qi, p)] = self._live_rows(mi, results[mi][b])
+                        if stats_memo is not None:
+                            stats_memo[(mi, qi, p)] = stats[mi][b]
+        else:
+            items = []
+            sels = []
+            for mi, model in enumerate(self.models):
+                if model.index.n_paths == 0:
+                    continue
+                L = model.index.paths.shape[1]
+                if L not in layouts:
+                    continue
+                sel, gidx, qh = layouts[L]
+                q_emb, q_emb0, q_multi = query_tensors(mi, gidx, len(sel))
+                items.append((model.index, q_emb, q_emb0, q_multi, qh))
+                sels.append((mi, sel))
+            if items:
+                # one fused traversal + ONE fused leaf scan for every partition
+                out = query_index_batch_multi(
+                    items,
+                    use_pallas=use_pallas,
+                    use_groups=use_groups,
+                    return_stats=stats_memo is not None,
+                )
+                results, stats = out if stats_memo is not None else (out, None)
+                for ii, ((mi, sel), rows_list) in enumerate(zip(sels, results)):
+                    for b, (qi, p) in enumerate(sel):
+                        memo[(mi, qi, p)] = self._live_rows(mi, rows_list[b])
+                        if stats_memo is not None:
+                            stats_memo[(mi, qi, p)] = stats[ii][b]
+        # ---- delta buffers: brute (query, row) pairs, one fused scan ----
+        if delta_memo is None or self.delta is None or not self.delta.any_rows():
             return
-        items = []
-        sels = []
-        for mi, model in enumerate(self.models):
-            if model.index.n_paths == 0:
-                continue
-            L = model.index.paths.shape[1]
-            if L not in layouts:
-                continue
-            sel, gidx, qh = layouts[L]
-            B = len(sel)
-            o, o0, om = cat[mi]
-            q_emb = o[gidx].reshape(B, -1)
-            q_emb0 = o0[gidx].reshape(B, -1)
-            q_multi = om[:, gidx].reshape(cfg.n_multi, B, -1) if cfg.n_multi else None
-            items.append((model.index, q_emb, q_emb0, q_multi, qh))
-            sels.append((mi, sel))
-        if not items:
+        if not self.models:
             return
-        # one fused traversal + ONE fused leaf scan for every partition
-        out = query_index_batch_multi(
-            items,
-            use_pallas=use_pallas,
-            use_groups=use_groups,
-            return_stats=stats_memo is not None,
-        )
-        results, stats = out if stats_memo is not None else (out, None)
-        for ii, ((mi, sel), rows_list) in enumerate(zip(sels, results)):
+        L = self.models[0].index.paths.shape[1]
+        lay = layouts.get(L)
+        if lay is None:
+            return
+        sel, gidx, qh = lay
+        d_items = []
+        d_mis = []
+        for mi in range(len(self.models)):
+            dp = self.delta.parts[mi]
+            if dp.n_rows == 0:
+                continue
+            q_emb, q_emb0, q_multi = query_tensors(mi, gidx, len(sel))
+            d_items.append((dp, q_emb, q_emb0, q_multi, qh))
+            d_mis.append(mi)
+        if not d_items:
+            return
+        d_results = probe_delta_multi(d_items, use_pallas=use_pallas)
+        for mi, rows_list in zip(d_mis, d_results):
             for b, (qi, p) in enumerate(sel):
-                memo[(mi, qi, p)] = rows_list[b]
-                if stats_memo is not None:
-                    stats_memo[(mi, qi, p)] = stats[ii][b]
+                delta_memo[(mi, qi, p)] = rows_list[b]
 
     def match_many(
         self,
@@ -700,6 +1202,12 @@ class GnnPeEngine:
         kinds stay available for cross-checks and benchmarks.
         ``probe_impl`` likewise overrides ``cfg.probe_impl`` ("loop" |
         "stacked") — match sets are byte-identical between the two.
+
+        With ``cfg.cache`` on, queries whose WL-canonical signature is
+        cached (and not invalidated by updates) skip the pipeline: the
+        cached canonical matches map back through the query's own
+        ordering (serve/cache.py) — exact for relabeled-isomorphic
+        repeats too.
         """
         assert self.graph is not None, "call build() first"
         cfg = self.cfg
@@ -709,29 +1217,105 @@ class GnnPeEngine:
         impl = probe_impl or cfg.probe_impl
         if impl not in ("loop", "stacked"):
             raise ValueError(f"unknown probe_impl {impl!r}; use 'loop' or 'stacked'")
-        use_groups = kind == "grouped"
         nq = len(queries)
         if nq == 0:
             return ([], []) if return_stats else []
+        cache = self._result_cache
+        if cache is None:
+            results, stats, _ = self._match_many_core(queries, kind, impl)
+            return (results, stats) if return_stats else results
+        from ..serve.cache import canonical_matches, remap_matches
+
+        canon = [canonical_form(q) for q in queries]
+        results: list = [None] * nq
+        stats: list = [None] * nq
+        miss: list[int] = []
+        for qi, (perm, key) in enumerate(canon):
+            ent = cache.get(key)
+            if ent is not None:
+                results[qi] = remap_matches(ent.matches, perm)
+                st = QueryStats()
+                st.cache_hit = True
+                st.n_matches = len(results[qi])
+                if ent.plan is not None:  # canonical ids → this query's ids
+                    st.plan = QueryPlan(
+                        paths=[tuple(int(perm[v]) for v in p) for p in ent.plan.paths],
+                        cost=ent.plan.cost,
+                        strategy=ent.plan.strategy,
+                    )
+                stats[qi] = st
+            else:
+                miss.append(qi)
+        if miss:
+            sub_results, sub_stats, contributing = self._match_many_core(
+                [queries[qi] for qi in miss], kind, impl
+            )
+            for k, qi in enumerate(miss):
+                results[qi] = sub_results[k]
+                stats[qi] = sub_stats[k]
+                q = queries[qi]
+                perm, key = canon[qi]
+                plan = sub_stats[k].plan
+                plan_hashes = {
+                    int(hash_labels(q.labels[np.asarray(p, np.int64)][None, :])[0])
+                    for p in plan.paths
+                }
+                inv = np.empty(q.n_vertices, np.int64)
+                inv[perm] = np.arange(q.n_vertices)
+                cache.put(
+                    key,
+                    canonical_matches(sub_results[k], perm, q.n_vertices),
+                    contributing[k],
+                    plan_hashes,
+                    self.epoch,
+                    plan=QueryPlan(
+                        paths=[tuple(int(inv[v]) for v in p) for p in plan.paths],
+                        cost=plan.cost,
+                        strategy=plan.strategy,
+                    ),
+                )
+        return (results, stats) if return_stats else results
+
+    def _match_many_core(self, queries: list, kind: str, impl: str):
+        """The fused batch pipeline (no result cache).  Returns
+        ``(results, stats, contributing)`` where ``contributing[qi]`` is
+        the set of partition (model) indices that produced candidate
+        rows — what the result cache scopes its invalidation on."""
+        cfg = self.cfg
+        use_groups = kind == "grouped"
+        nq = len(queries)
         stats = [QueryStats() for _ in range(nq)]
         t0 = time.perf_counter()
         q_embs = self._query_node_embeddings_many(queries)
         memo: dict = {}
+        delta_memo: dict = {}
+        delta = self.delta
         n_models = len(self.models)
         # ---- plans (dr probes ride the same batched pipeline) -----------
         weight_fns: list = [None] * nq
+        cached_plans: list = [None] * nq
         plan_group_size = 1
         if cfg.plan_weight == "dr":
+            if use_groups:
+                plan_group_size = cfg.group_size
+            cached_plans = [self._dr_plan_peek(q, plan_group_size) for q in queries]
             probe_reqs = [
                 (qi, p)
                 for qi, q in enumerate(queries)
+                if cached_plans[qi] is None
                 for p in candidate_plan_paths(q, cfg.path_length)
             ]
             stats_memo: dict | None = {} if use_groups else None
-            self._probe_batch(
-                probe_reqs, queries, q_embs, memo,
-                use_groups=use_groups, stats_memo=stats_memo, probe_impl=impl,
-            )
+            if probe_reqs:
+                self._probe_batch(
+                    probe_reqs, queries, q_embs, memo,
+                    use_groups=use_groups, stats_memo=stats_memo, probe_impl=impl,
+                    delta_memo=delta_memo,
+                )
+
+            def _delta_rows(mi, qi, p):
+                rows = delta_memo.get((mi, qi, p))
+                return rows.size if rows is not None else 0
 
             if use_groups:
                 # grouped cost model: weights are group fan-outs
@@ -739,18 +1323,22 @@ class GnnPeEngine:
                 # instead of the per-path |DR(o(p_q))| counts the
                 # two-level probe avoids materializing; plan_query's
                 # group_size scale only converts the reported cost to
-                # leaf-row units (selection is scale-invariant)
-                plan_group_size = cfg.group_size
+                # leaf-row units (selection is scale-invariant).  Delta
+                # buffer rows count as ceil(rows / group_size) groups of
+                # brute-pair work.
+                gsz = max(cfg.group_size, 1)
 
                 def make_weight_fn(qi):
                     def weight_fn(p):
-                        return float(
-                            sum(
-                                stats_memo[(mi, qi, p)]["surviving_groups"]
-                                for mi in range(n_models)
-                                if (mi, qi, p) in stats_memo
-                            )
+                        w = sum(
+                            stats_memo[(mi, qi, p)]["surviving_groups"]
+                            for mi in range(n_models)
+                            if (mi, qi, p) in stats_memo
                         )
+                        w += sum(
+                            -(-_delta_rows(mi, qi, p) // gsz) for mi in range(n_models)
+                        )
+                        return float(w)
 
                     return weight_fn
 
@@ -764,13 +1352,19 @@ class GnnPeEngine:
                                 for mi in range(n_models)
                                 if (mi, qi, p) in memo
                             )
+                            + sum(_delta_rows(mi, qi, p) for mi in range(n_models))
                         )
 
                     return weight_fn
 
-            weight_fns = [make_weight_fn(qi) for qi in range(nq)]
+            weight_fns = [
+                make_weight_fn(qi) if cached_plans[qi] is None else None
+                for qi in range(nq)
+            ]
         plans = [
-            self._plan_cached(q, weight_fn=weight_fns[qi], group_size=plan_group_size)
+            cached_plans[qi]
+            if cached_plans[qi] is not None
+            else self._plan_cached(q, weight_fn=weight_fns[qi], group_size=plan_group_size)
             for qi, q in enumerate(queries)
         ]
         # ---- retrieval: one fused probe per partition for all plans -----
@@ -778,28 +1372,43 @@ class GnnPeEngine:
             (qi, p)
             for qi, plan in enumerate(plans)
             for p in plan.paths
-            if not any((mi, qi, p) in memo for mi in range(n_models))
+            if not any(
+                (mi, qi, p) in memo or (mi, qi, p) in delta_memo
+                for mi in range(n_models)
+            )
         ]
         if todo:
             self._probe_batch(
-                todo, queries, q_embs, memo, use_groups=use_groups, probe_impl=impl
+                todo, queries, q_embs, memo, use_groups=use_groups, probe_impl=impl,
+                delta_memo=delta_memo,
             )
         filter_time = time.perf_counter() - t0
         # ---- per-query candidate assembly + join + refine ---------------
         results = []
+        contributing: list[set] = [set() for _ in range(nq)]
         for qi, (q, plan) in enumerate(zip(queries, plans)):
             st = stats[qi]
             st.plan = plan
             candidates = [[] for _ in plan.paths]
             total_paths = 0
             for mi, model in enumerate(self.models):
-                if model.index.n_paths == 0:
+                dp = delta.parts[mi] if delta is not None else None
+                n_live = model.index.n_paths + (
+                    dp.n_rows - dp.n_tombstones if dp is not None else 0
+                )
+                if n_live <= 0:
                     continue
-                total_paths += model.index.n_paths
+                total_paths += n_live
                 for pi, p in enumerate(plan.paths):
                     rows = memo.get((mi, qi, p))
                     if rows is not None and rows.size:
                         candidates[pi].append(model.index.paths[rows])
+                        contributing[qi].add(mi)
+                    if dp is not None:
+                        drows = delta_memo.get((mi, qi, p))
+                        if drows is not None and drows.size:
+                            candidates[pi].append(dp.paths[drows])
+                            contributing[qi].add(mi)
             cand_arrays = []
             cand_total = 0
             for pi, parts in enumerate(candidates):
@@ -821,6 +1430,4 @@ class GnnPeEngine:
             st.join_time = time.perf_counter() - t1
             st.n_matches = len(matches)
             results.append(matches)
-        if return_stats:
-            return results, stats
-        return results
+        return results, stats, contributing

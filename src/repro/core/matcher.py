@@ -13,7 +13,18 @@ import numpy as np
 
 from ..graphs import Graph
 
-__all__ = ["join_candidates", "refine", "match_from_candidates"]
+__all__ = ["join_candidates", "refine", "match_from_candidates", "sort_matches"]
+
+
+def sort_matches(matches: list) -> list:
+    """Canonical (lexicographic) ordering of a match list.
+
+    The match SET of an exact engine is deterministic, but the list
+    order tracks the join's table order, which can differ between a
+    delta-maintained index and a from-scratch rebuild (row ties resort)
+    or between plans.  Update equivalence checks and the bench gate
+    compare through this ordering."""
+    return sorted(matches)
 
 
 def _lex_keys(a: np.ndarray, n_values: int) -> np.ndarray:

@@ -12,7 +12,8 @@ Initial-path strategies: OIP / AIP / εIP (§5.2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+import weakref
+from typing import Callable
 
 import numpy as np
 
@@ -31,13 +32,6 @@ class QueryPlan:
     @property
     def n_paths(self) -> int:
         return len(self.paths)
-
-
-def _covered(paths: Sequence[tuple[int, ...]]) -> set[int]:
-    out: set[int] = set()
-    for p in paths:
-        out.update(p)
-    return out
 
 
 def candidate_plan_paths(q: Graph, length: int) -> list:
@@ -62,6 +56,9 @@ def _dense_ranks(values: list) -> list:
     return [lut[v] for v in values]
 
 
+_CANON_CACHE: dict = {}  # id(graph) -> (perm, key); evicted via weakref.finalize
+
+
 def canonical_form(q: Graph) -> tuple[np.ndarray, bytes]:
     """Deterministic label/degree canonical ordering for plan caching.
 
@@ -76,8 +73,14 @@ def canonical_form(q: Graph) -> tuple[np.ndarray, bytes]:
     is always sound; isomorphic queries that the refinement fails to
     align just miss the cache.  Queries are tiny (≪ the data graph), so
     the Python refinement loop is noise next to the greedy planner it
-    short-circuits.
+    short-circuits.  The serving hot path canonicalizes the same query
+    instance for the result cache, the dr-plan cache AND the deg-plan
+    cache, so the (perm, key) pair memoizes per graph object (weakref-
+    evicted, like matcher's edge-key cache).
     """
+    cached = _CANON_CACHE.get(id(q))
+    if cached is not None:
+        return cached
     n = q.n_vertices
     if n == 0:
         return np.zeros(0, np.int64), b"\x00"
@@ -103,6 +106,8 @@ def canonical_form(q: Graph) -> tuple[np.ndarray, bytes]:
         + q.labels[perm].astype(np.int64).tobytes()
         + np.asarray(edges, np.int64).tobytes()
     )
+    _CANON_CACHE[id(q)] = (perm, key)
+    weakref.finalize(q, _CANON_CACHE.pop, id(q), None)
     return perm, key
 
 
@@ -156,40 +161,47 @@ def plan_query(
         raise ValueError(f"unknown strategy {strategy}")
 
     n_q = q.n_vertices
-    sets = {p: frozenset(p) for p in paths}  # hoisted out of the greedy loop
+    # vectorized greedy scoring: membership matrix + weight vector, so each
+    # greedy step is one NumPy pass over ALL candidate paths instead of a
+    # per-candidate Python loop (ROADMAP planner item).  Simple paths have
+    # distinct vertices, so |p ∩ cov| is a masked row sum of M.
+    n_paths_all = len(paths)
+    M = np.zeros((n_paths_all, n_q), bool)
+    for i, p in enumerate(paths):
+        M[i, list(p)] = True
+    sizes = M.sum(axis=1)
+    w_arr = np.asarray([w[p] for p in paths], np.float64)
+    path_index = {p: i for i, p in enumerate(paths)}
     best_q: list[tuple[int, ...]] | None = None
     best_cost = float("inf")
     for p0 in initial:
-        local = {p0}
+        in_local = np.zeros(n_paths_all, bool)
+        in_local[path_index[p0]] = True
         order = [p0]
         cost = w[p0]
-        cov = set(p0)
+        cov = np.zeros(n_q, bool)
+        cov[list(p0)] = True
+        n_cov = int(cov.sum())
         stuck = False
-        while len(cov) < n_q:
+        while n_cov < n_q:
             # one pass: prefer paths connecting to the covered set with min
             # (overlap, weight) — Alg. 4 line 7; fall back to disconnected
-            # paths adding new vertices (same order/tie-breaks as the
-            # original two-pass candidate scan)
-            best_key = None
-            best_p = None
-            for p in paths:
-                if p in local:
-                    continue
-                sp = sets[p]
-                inter = len(sp & cov)
-                if len(sp) == inter:  # no new vertices
-                    continue
-                key = (inter == 0, inter, w[p])
-                if best_key is None or key < best_key:
-                    best_key = key
-                    best_p = p
-            if best_p is None:
+            # paths adding new vertices.  lexsort keys mirror the scalar
+            # loop's (inter == 0, inter, w, first-index) tie-breaks exactly.
+            inter = (M & cov[None, :]).sum(axis=1)
+            valid = ~in_local & (sizes > inter)  # must add a new vertex
+            idx = np.nonzero(valid)[0]
+            if idx.size == 0:
                 stuck = True
                 break
-            local.add(best_p)
+            k = np.lexsort((idx, w_arr[idx], inter[idx], inter[idx] == 0))[0]
+            bi = int(idx[k])
+            best_p = paths[bi]
+            in_local[bi] = True
             order.append(best_p)
             cost += w[best_p]
-            cov |= sets[best_p]
+            cov |= M[bi]
+            n_cov = int(cov.sum())
         if stuck:
             continue
         if cost < best_cost:

@@ -51,7 +51,13 @@ import numpy as np
 
 from .index import PackedIndex
 
-__all__ = ["StackedIndex", "StackedGroups", "build_stacked", "plan_shards"]
+__all__ = [
+    "StackedIndex",
+    "StackedGroups",
+    "build_stacked",
+    "plan_shards",
+    "restack_slot",
+]
 
 
 def _reject_level(nb: int, d_cat: int, d0: int):
@@ -155,6 +161,9 @@ class StackedIndex:
     label_hash: np.ndarray | None  # (S, P_max) int64
     groups: StackedGroups | None
     real_bytes: int  # Σ source-index bytes covered by these tensors
+    # per-slot share of real_bytes — maintained by ``restack_slot`` so
+    # padding accounting survives per-partition compactions
+    slot_real_bytes: np.ndarray | None = None  # (S,) int64
 
     @property
     def n_levels(self) -> int:
@@ -194,6 +203,21 @@ def _slot_levels(index: PackedIndex, n_levels: int, fanout: int):
     while len(levels) < n_levels:
         levels.append(_roll_up(*levels[-1], fanout))
     return levels[::-1]  # top → leaf
+
+
+def _index_real_bytes(ix: PackedIndex) -> int:
+    """Source-index bytes the stacked tensors cover for one partition
+    (stacked levels keep the hi bound of mbr/mbr_multi + both mbr0 ends)."""
+    rb = ix.emb.nbytes + ix.emb0.nbytes + ix.emb_multi.nbytes
+    for lv in ix.levels:
+        rb += lv["mbr"].nbytes // 2 + lv["mbr_multi"].nbytes // 2 + lv["mbr0"].nbytes
+    if ix.emb_q is not None:
+        rb += ix.emb_q.nbytes
+    if ix.label_hash is not None:
+        rb += ix.label_hash.nbytes
+    if ix.groups is not None:
+        rb += ix.groups.nbytes()
+    return int(rb)
 
 
 def _stack_groups(
@@ -304,7 +328,7 @@ def build_stacked(indexes: list, n_shards: int = 1) -> StackedIndex:
     emb0 = np.zeros((n_slots, p_max, d0), np.float32)
     emb_q = np.zeros((n_slots, p_max, d_cat), np.int8) if quantized else None
     label_hash = np.zeros((n_slots, p_max), np.int64) if hashed else None
-    real_bytes = 0
+    slot_real_bytes = np.zeros(n_slots, np.int64)
     for i, ix in enumerate(indexes):
         P = ix.n_paths
         if P == 0:
@@ -321,18 +345,8 @@ def build_stacked(indexes: list, n_shards: int = 1) -> StackedIndex:
             emb_q[s, :P] = ix.emb_q
         if label_hash is not None:
             label_hash[s, :P] = ix.label_hash
-        real_bytes += ix.emb.nbytes + ix.emb0.nbytes + ix.emb_multi.nbytes
-        for lv in ix.levels:
-            # stacked levels keep the hi bound of mbr/mbr_multi + both mbr0 ends
-            real_bytes += (
-                lv["mbr"].nbytes // 2 + lv["mbr_multi"].nbytes // 2 + lv["mbr0"].nbytes
-            )
-        if ix.emb_q is not None:
-            real_bytes += ix.emb_q.nbytes
-        if ix.label_hash is not None:
-            real_bytes += ix.label_hash.nbytes
-        if ix.groups is not None:
-            real_bytes += ix.groups.nbytes()
+        slot_real_bytes[s] = _index_real_bytes(ix)
+    real_bytes = int(slot_real_bytes.sum())
 
     groups = _stack_groups(
         indexes, slot_of, n_slots, level_hi[-1].shape[1], d_cat, d0
@@ -355,7 +369,139 @@ def build_stacked(indexes: list, n_shards: int = 1) -> StackedIndex:
         label_hash=label_hash,
         groups=groups,
         real_bytes=int(real_bytes),
+        slot_real_bytes=slot_real_bytes,
     )
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-stacking: rewrite ONE slot after a partition compaction
+# ---------------------------------------------------------------------------
+
+
+def _grow_axis1(x: np.ndarray, width: int, fill) -> np.ndarray:
+    """Pad ``x`` along axis 1 up to ``width`` with a constant sentinel."""
+    if x.shape[1] >= width:
+        return x
+    pad = np.full((x.shape[0], width - x.shape[1]) + x.shape[2:], fill, x.dtype)
+    return np.concatenate([x, pad], axis=1)
+
+
+def restack_slot(st: StackedIndex, slot: int, index: PackedIndex) -> bool:
+    """Elastic re-stacking: rewrite slot ``slot`` in place from a freshly
+    compacted ``PackedIndex``, leaving every other slot's values alone.
+
+    When the new partition fits the existing padded capacity the update
+    is pure row writes; when it is wider (more paths, more blocks per
+    level, more group slots) the affected tensors grow — a pad-and-copy
+    of dense arrays, never a re-stack of the other partitions.  Returns
+    ``False`` when the slot cannot be rewritten in this layout (the
+    partition's level COUNT grew past the stacked depth, or its geometry
+    / sidecar flags diverged) — the caller falls back to a full
+    ``build_stacked``, which is the rare case by construction.
+    """
+    quantized = st.emb_q is not None
+    hashed = st.label_hash is not None
+    if index.n_paths:
+        if (index.block_size, index.fanout, index.emb_multi.shape[0]) != (
+            st.block_size, st.fanout, st.n_gnn,
+        ):
+            return False
+        d = index.emb.shape[1]
+        if (d * (1 + st.n_gnn), index.emb0.shape[1]) != (
+            st.emb_cat.shape[2], st.emb0.shape[2],
+        ):
+            return False
+        if (index.emb_q is not None) != quantized or (index.label_hash is not None) != hashed:
+            return False
+        if len(index.levels) > st.n_levels:
+            return False  # deeper forest than the stacked layout holds
+        if (st.groups is not None) != (index.groups is not None):
+            return False
+        if st.groups is not None and int(index.groups.group_size) != st.groups.group_size:
+            return False
+
+    P = index.n_paths
+
+    # ---- levels: grow widths if needed, then reject-fill + write slot ----
+    lvls = _slot_levels(index, st.n_levels, st.fanout) if P else None
+    level_hi, level_lo0, level_hi0 = list(st.level_hi), list(st.level_lo0), list(st.level_hi0)
+    for li in range(st.n_levels):
+        need = lvls[li][0].shape[0] if lvls is not None else 0
+        level_hi[li] = _grow_axis1(level_hi[li], need, -np.inf)
+        level_lo0[li] = _grow_axis1(level_lo0[li], need, np.inf)
+        level_hi0[li] = _grow_axis1(level_hi0[li], need, -np.inf)
+        level_hi[li][slot] = -np.inf
+        level_lo0[li][slot] = np.inf
+        level_hi0[li][slot] = -np.inf
+        if lvls is not None:
+            h, l0, h0 = lvls[li]
+            level_hi[li][slot, : h.shape[0]] = h
+            level_lo0[li][slot, : l0.shape[0]] = l0
+            level_hi0[li][slot, : h0.shape[0]] = h0
+    st.level_hi = tuple(level_hi)
+    st.level_lo0 = tuple(level_lo0)
+    st.level_hi0 = tuple(level_hi0)
+
+    # ---- leaf payload ----------------------------------------------------
+    st.emb_cat = _grow_axis1(st.emb_cat, P, 0.0)
+    st.emb0 = _grow_axis1(st.emb0, P, 0.0)
+    st.emb_cat[slot] = 0.0
+    st.emb0[slot] = 0.0
+    if quantized:
+        st.emb_q = _grow_axis1(st.emb_q, P, 0)
+        st.emb_q[slot] = 0
+    if hashed:
+        st.label_hash = _grow_axis1(st.label_hash, P, 0)
+        st.label_hash[slot] = 0
+    if P:
+        cat = (
+            np.concatenate(
+                [index.emb] + [index.emb_multi[k] for k in range(st.n_gnn)], axis=1
+            )
+            if st.n_gnn
+            else index.emb
+        )
+        st.emb_cat[slot, :P] = cat
+        st.emb0[slot, :P] = index.emb0
+        if quantized:
+            st.emb_q[slot, :P] = index.emb_q
+        if hashed:
+            st.label_hash[slot, :P] = index.label_hash
+
+    # ---- group sidecar ---------------------------------------------------
+    g = st.groups
+    if g is not None:
+        G = st.level_hi[-1].shape[1] * g.gpb  # leaf width may have grown
+        g.hi = _grow_axis1(g.hi, G, -np.inf)
+        g.lo0 = _grow_axis1(g.lo0, G, np.inf)
+        g.hi0 = _grow_axis1(g.hi0, G, -np.inf)
+        g.start = _grow_axis1(g.start, G, 0)
+        g.count = _grow_axis1(g.count, G, 0)
+        g.hi[slot] = -np.inf
+        g.lo0[slot] = np.inf
+        g.hi0[slot] = -np.inf
+        g.start[slot] = 0
+        g.count[slot] = 0
+        if P:
+            gg = index.groups
+            bgs = gg.block_group_start
+            per_block = np.diff(bgs)
+            blk = np.repeat(np.arange(per_block.shape[0], dtype=np.int64), per_block)
+            within = np.arange(blk.shape[0], dtype=np.int64) - np.repeat(bgs[:-1], per_block)
+            slots = blk * g.gpb + within
+            g.hi[slot, slots] = gg.mbr_hi
+            g.lo0[slot, slots] = gg.mbr0[:, :, 0]
+            g.hi0[slot, slots] = gg.mbr0[:, :, 1]
+            g.start[slot, slots] = gg.group_start[:-1]
+            g.count[slot, slots] = np.diff(gg.group_start)
+
+    st.n_paths[slot] = P
+    new_real = _index_real_bytes(index) if P else 0
+    if st.slot_real_bytes is None:
+        st.slot_real_bytes = np.zeros(st.n_slots, np.int64)
+    st.real_bytes = int(st.real_bytes - int(st.slot_real_bytes[slot]) + new_real)
+    st.slot_real_bytes[slot] = new_real
+    return True
 
 
 # ---------------------------------------------------------------------------

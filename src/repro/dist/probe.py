@@ -36,7 +36,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core import index as index_mod
 from ..core.index import quantize_query
-from ..core.stacked import StackedIndex, build_stacked, stacked_masks_ref
+from ..core.stacked import StackedIndex, build_stacked, restack_slot, stacked_masks_ref
 
 __all__ = ["StackedProbe"]
 
@@ -54,16 +54,37 @@ class StackedProbe:
     ``devices=None`` uses every local jax device; a single device runs
     plain ``jit(vmap(...))``, more than one shards the partition axis
     with ``shard_map`` over a ``("part",)`` mesh.
+
+    ``leaf_pair_cap`` bounds the cross-partition leaf member-expansion:
+    surviving (partition, query, block/group) cells expand to at most
+    ~``cap`` (query, row) pairs per chunk, each chunk streaming through
+    the pre-filter + fused exact scan before the next materializes — a
+    pathological partition (huge surviving fan-out) costs extra kernel
+    dispatches instead of host memory.  Results are identical for any
+    cap; with the default no bench workload chunks at all.
     """
 
-    def __init__(self, indexes: list, devices=None, stacked: StackedIndex | None = None):
+    def __init__(
+        self,
+        indexes: list,
+        devices=None,
+        stacked: StackedIndex | None = None,
+        leaf_pair_cap: int = 1 << 21,
+    ):
+        if leaf_pair_cap < 1:
+            raise ValueError(f"leaf_pair_cap must be >= 1, got {leaf_pair_cap}")
         self.devices = list(devices) if devices is not None else list(jax.devices())
+        self.leaf_pair_cap = int(leaf_pair_cap)
         n_dev = max(len(self.devices), 1)
         self.stacked = stacked if stacked is not None else build_stacked(indexes, n_shards=n_dev)
         self.mesh = (
             jax.make_mesh((n_dev,), ("part",), devices=self.devices) if n_dev > 1 else None
         )
         self._mask_fns: dict = {}
+        self._refresh_device()
+
+    def _refresh_device(self) -> None:
+        """(Re)materialize the device-resident level/group bounds."""
         self._dev_levels = (
             tuple(self._put(x) for x in self.stacked.level_hi),
             tuple(self._put(x) for x in self.stacked.level_lo0),
@@ -73,6 +94,18 @@ class StackedProbe:
         self._dev_groups = (
             (self._put(g.hi), self._put(g.lo0), self._put(g.hi0)) if g is not None else None
         )
+
+    def update_slot(self, part_i: int, index) -> bool:
+        """Elastic re-stacking after partition ``part_i`` compacted: only
+        its shard slot is rewritten (core/stacked.py ``restack_slot``) and
+        the device tensors refresh — the other partitions are never
+        re-stacked.  Returns ``False`` when the slot layout cannot absorb
+        the new index (level count grew); the caller rebuilds the probe."""
+        slot = int(self.stacked.slot_of[part_i])
+        if not restack_slot(self.stacked, slot, index):
+            return False
+        self._refresh_device()
+        return True
 
     def _put(self, x):
         if self.mesh is not None:
@@ -206,7 +239,14 @@ class StackedProbe:
 
         alive, gkeep = self._device_masks(q_cat, q0, eps, use_groups, device_stage)
 
-        # ---- leaf stage: expand survivors across ALL partitions at once --
+        # ---- leaf stage: expand survivors across ALL partitions ----------
+        # Cells (partition, query, block/group) are described by a start
+        # row + member count WITHOUT materializing the rows, then expanded
+        # in chunks of ≤ ~leaf_pair_cap pairs: each chunk streams through
+        # the int8 pre-filter and the fused exact scan before the next
+        # chunk exists, so a pathological partition cannot blow host
+        # memory mid-probe.  Cell order is (pi, qi, ·)-major, so the
+        # concatenated survivors stay combo-sorted for the final split.
         bs = st.block_size
         checked = member_rows = None
         if use_groups:
@@ -218,42 +258,63 @@ class StackedProbe:
             pi, qi, gi = np.nonzero(gkeep)
             starts = g.start[pi, gi]
             counts = g.count[pi, gi]
-            rows = index_mod._expand_segments(starts, counts)
-            pr = np.repeat(pi, counts).astype(np.int64)
-            qr = np.repeat(qi, counts).astype(np.int64)
         else:
             pi, qi, bi = np.nonzero(alive)
-            row_mat = bi[:, None] * bs + np.arange(bs)[None, :]
-            valid = row_mat < st.n_paths[pi][:, None]
-            rows = row_mat[valid].astype(np.int64)
-            pr = np.repeat(pi, bs).reshape(-1, bs)[valid].astype(np.int64)
-            qr = np.repeat(qi, bs).reshape(-1, bs)[valid].astype(np.int64)
-        index_mod.PAIR_COUNTERS["leaf_pairs"] += int(rows.size)
-        combo = pr * Q + qr
+            starts = bi.astype(np.int64) * bs
+            counts = np.clip(st.n_paths[pi] - starts, 0, bs)
+        total_pairs = int(counts.sum()) if counts.size else 0
+        index_mod.PAIR_COUNTERS["leaf_pairs"] += total_pairs
         if return_stats and use_groups:
-            member_rows = np.bincount(combo, minlength=S * Q)
-        # conservative int8 + label-hash pre-filter (§Perf C1/C2)
-        if st.emb_q is not None and rows.size:
-            qq = quantize_query(q_cat)
-            pre = np.all(qq[pr, qr] <= st.emb_q[pr, rows], axis=1)
-            if st.label_hash is not None and q_label_hash is not None:
-                pre &= st.label_hash[pr, rows] == np.asarray(q_label_hash)[qr]
-            rows, pr, qr, combo = rows[pre], pr[pre], qr[pre], combo[pre]
-        # exact Lemma 4.1 + 4.2 verdicts — one fused pass for every partition
-        if use_pallas:
-            keep = index_mod._pairs_keep_mask(
-                q_cat[pr, qr], q0[pr, qr], st.emb_cat[pr, rows], st.emb0[pr, rows],
-                eps, use_pallas=True,
+            member_rows = (
+                np.bincount(pi * Q + qi, weights=counts, minlength=S * Q).astype(np.int64)
+                if counts.size
+                else np.zeros(S * Q, np.int64)
             )
-        else:  # label short-circuit, like _pairs_keep_mask_numpy_lazy
-            keep = np.all(np.abs(st.emb0[pr, rows] - q0[pr, qr]) <= eps, axis=1)
-            sub = np.nonzero(keep)[0]
-            if sub.size:
-                keep[sub] = np.all(
-                    q_cat[pr[sub], qr[sub]] <= st.emb_cat[pr[sub], rows[sub]] + eps, axis=1
+        qq = quantize_query(q_cat) if st.emb_q is not None and total_pairs else None
+        kept_rows: list = []
+        kept_combo: list = []
+        if total_pairs:
+            cell_start = np.cumsum(counts) - counts
+            chunk_of = cell_start // self.leaf_pair_cap  # nondecreasing
+            n_chunks = int(chunk_of[-1]) + 1
+            # chunks are contiguous cell ranges — slice via searchsorted
+            # instead of one full boolean scan per chunk
+            bounds = np.searchsorted(chunk_of, np.arange(n_chunks + 1))
+        else:
+            n_chunks = 0
+        for c in range(n_chunks):
+            lo, hi = int(bounds[c]), int(bounds[c + 1])
+            cnt = counts[lo:hi]
+            rows = index_mod._expand_segments(starts[lo:hi], cnt)
+            pr = np.repeat(pi[lo:hi], cnt).astype(np.int64)
+            qr = np.repeat(qi[lo:hi], cnt).astype(np.int64)
+            combo = pr * Q + qr
+            # conservative int8 + label-hash pre-filter (§Perf C1/C2)
+            if qq is not None and rows.size:
+                pre = np.all(qq[pr, qr] <= st.emb_q[pr, rows], axis=1)
+                if st.label_hash is not None and q_label_hash is not None:
+                    pre &= st.label_hash[pr, rows] == np.asarray(q_label_hash)[qr]
+                rows, pr, qr, combo = rows[pre], pr[pre], qr[pre], combo[pre]
+            # exact Lemma 4.1 + 4.2 verdicts — one fused pass per chunk
+            if use_pallas:
+                keep = index_mod._pairs_keep_mask(
+                    q_cat[pr, qr], q0[pr, qr], st.emb_cat[pr, rows], st.emb0[pr, rows],
+                    eps, use_pallas=True,
                 )
+            else:  # label short-circuit, like _pairs_keep_mask_numpy_lazy
+                keep = np.all(np.abs(st.emb0[pr, rows] - q0[pr, qr]) <= eps, axis=1)
+                sub = np.nonzero(keep)[0]
+                if sub.size:
+                    keep[sub] = np.all(
+                        q_cat[pr[sub], qr[sub]] <= st.emb_cat[pr[sub], rows[sub]] + eps,
+                        axis=1,
+                    )
+            kept_rows.append(rows[keep])
+            kept_combo.append(combo[keep])
+        rows_all = np.concatenate(kept_rows) if kept_rows else np.zeros(0, np.int64)
+        combo_all = np.concatenate(kept_combo) if kept_combo else np.zeros(0, np.int64)
         splits = np.split(
-            rows[keep], np.cumsum(np.bincount(combo[keep], minlength=S * Q))[:-1]
+            rows_all, np.cumsum(np.bincount(combo_all, minlength=S * Q))[:-1]
         )
         results = [
             [splits[int(st.slot_of[i]) * Q + qj] for qj in range(Q)]

@@ -1,0 +1,181 @@
+"""Query-result cache keyed on WL-canonical query signatures, with
+partition-scoped invalidation (the distributed GNN-PE follow-up's
+cache-optimization layer).
+
+Keying.  ``planner.canonical_form`` already computes a deterministic
+label/degree canonical ordering for plan caching; equal keys guarantee
+identical canonical graphs, so two (even relabeled-isomorphic) queries
+with the same key have the same matches *up to the vertex relabeling*.
+Entries therefore store matches in canonical vertex order
+(``canonical_matches``) and every hit maps them back through the
+querying graph's own permutation (``remap_matches``) — a repeat of an
+isomorphic query skips the whole filter + join + refine pipeline.
+
+Partition-scoped invalidation.  Each entry records
+
+  * ``contributing`` — the partitions (engine model indices) that
+    contributed candidate rows to the original computation, and
+  * ``plan_hashes``  — the label-sequence hashes of its plan paths.
+
+An update that mutates partitions ``M`` evicts an entry iff
+
+  1. a contributing partition was mutated (``M ∩ contributing ≠ ∅``) —
+     deletions or insertions there can remove or add matches; or
+  2. a *non*-contributing partition gained delta paths whose
+     label-sequence hash collides with one of the entry's plan-path
+     hashes — the only way a partition that previously produced zero
+     candidates can start producing them, since a candidate must pass
+     the Lemma 4.1 label-embedding equality (the same
+     distinct-labels ⇒ distinct-hash assumption the §Perf C2 quantized
+     leaf pre-filter already relies on).
+
+Everything else survives: updates far from an entry's candidate space
+leave it servable, and compaction (a pure re-sort) invalidates nothing.
+Entries are LRU-evicted beyond ``capacity``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["ResultCache", "CacheStats", "canonical_matches", "remap_matches"]
+
+
+def canonical_matches(matches: list, perm: np.ndarray, n_vertices: int) -> np.ndarray:
+    """Match tuples (indexed by query vertex) → (M, n) canonical-order array."""
+    if not matches:
+        return np.zeros((0, n_vertices), np.int32)
+    arr = np.asarray(matches, np.int32).reshape(len(matches), n_vertices)
+    return arr[:, perm]
+
+
+def remap_matches(arr: np.ndarray, perm: np.ndarray) -> list:
+    """Canonical-order match array → tuples for a query with ordering ``perm``."""
+    out = np.empty_like(arr)
+    out[:, perm] = arr
+    return [tuple(int(x) for x in r) for r in out]
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    insertions: int = 0
+    invalidated: int = 0  # entries evicted by update invalidation
+    evicted: int = 0  # entries evicted by the capacity bound
+
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {**dataclasses.asdict(self), "hit_rate": self.hit_rate()}
+
+
+@dataclasses.dataclass
+class _Entry:
+    matches: np.ndarray  # (M, n) int32, canonical vertex order
+    contributing: frozenset  # partition (model) indices that produced candidates
+    plan_hashes: frozenset  # label-sequence hashes of the entry's plan paths
+    epoch: int  # index epoch the entry was computed at
+    plan: object = None  # QueryPlan in canonical vertex ids (for hit-side stats)
+
+
+class ResultCache:
+    def __init__(self, capacity: int = 2048):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._entries: dict[bytes, _Entry] = {}  # insertion order = LRU order
+        self._by_part: dict[int, set] = {}  # partition -> keys it contributed to
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # ------------------------------------------------------------------
+    def get(self, key: bytes) -> _Entry | None:
+        ent = self._entries.get(key)
+        if ent is None:
+            self.stats.misses += 1
+            return None
+        # LRU touch: re-append at the back of the insertion order
+        del self._entries[key]
+        self._entries[key] = ent
+        self.stats.hits += 1
+        return ent
+
+    def put(
+        self,
+        key: bytes,
+        matches: np.ndarray,
+        contributing,
+        plan_hashes,
+        epoch: int,
+        plan=None,
+    ) -> None:
+        if key in self._entries:
+            self._drop(key)
+        while len(self._entries) >= self.capacity:
+            self._drop(next(iter(self._entries)))
+            self.stats.evicted += 1
+        ent = _Entry(
+            matches=matches,
+            contributing=frozenset(int(p) for p in contributing),
+            plan_hashes=frozenset(int(h) for h in plan_hashes),
+            epoch=int(epoch),
+            plan=plan,
+        )
+        self._entries[key] = ent
+        for p in ent.contributing:
+            self._by_part.setdefault(p, set()).add(key)
+        self.stats.insertions += 1
+
+    # ------------------------------------------------------------------
+    def invalidate(self, mutated: dict) -> int:
+        """Evict entries an update batch could have staled.
+
+        ``mutated``: partition (model) index → ``{"deleted": bool,
+        "inserted_hashes": iterable of int label-sequence hashes}`` for
+        every partition the update touched.  Returns the eviction count.
+        """
+        if not mutated or not self._entries:
+            return 0
+        victims = set()
+        inserted: set = set()
+        for mi, info in mutated.items():
+            victims |= self._by_part.get(int(mi), set())
+            hashes = info.get("inserted_hashes")
+            if hashes is not None:
+                inserted.update(int(h) for h in np.asarray(hashes).reshape(-1))
+        if inserted:
+            mut = set(int(mi) for mi in mutated)
+            for key, ent in self._entries.items():
+                if key in victims:
+                    continue
+                # a non-contributing mutated partition can add candidates
+                # only via label-compatible new paths
+                if (mut - ent.contributing) and (ent.plan_hashes & inserted):
+                    victims.add(key)
+        for key in victims:
+            self._drop(key)
+        self.stats.invalidated += len(victims)
+        return len(victims)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._by_part.clear()
+
+    # ------------------------------------------------------------------
+    def _drop(self, key: bytes) -> None:
+        ent = self._entries.pop(key, None)
+        if ent is None:
+            return
+        for p in ent.contributing:
+            keys = self._by_part.get(p)
+            if keys is not None:
+                keys.discard(key)
+                if not keys:
+                    del self._by_part[p]

@@ -7,6 +7,16 @@ probe per partition, one Pallas leaf scan per partition for the whole
 tick.  Queries of mixed sizes batch fine (the probe batch stacks path
 embeddings, not query graphs).
 
+Live graphs (§delta): ``submit_update`` queues ``GraphUpdate`` batches
+alongside queries; each tick first coalesces up to
+``max_updates_per_tick`` of them into ONE ``engine.apply_updates``
+epoch, then serves its query batch against the fresh index — update
+ticks interleave with query ticks on the same loop, so a query always
+sees every update submitted before its tick.  With ``engine.cfg.cache``
+on, the engine's result cache rides along: repeat queries in the stream
+are served from cache and updates evict only the entries whose
+partitions mutated.
+
 CPU-scale tests drive a tiny engine; the same server loop fronts a
 paper-scale index unchanged.
 """
@@ -28,6 +38,8 @@ class MatchServeConfig:
     # "stacked" probes the dense stacked-tensor index, sharded over the
     # local device mesh (dist/probe.py)
     probe_impl: str | None = None
+    # graph updates coalesced into one apply_updates epoch per tick
+    max_updates_per_tick: int = 4
 
 
 @dataclasses.dataclass
@@ -46,6 +58,10 @@ class MatchServer:
         self.latency_s: dict = {}  # rid -> submit→finish (includes queue wait)
         self.service_s: dict = {}  # rid -> its tick's fused match_many time
         self._next_id = 0
+        self.update_queue: list = []  # pending GraphUpdate batches
+        self.update_s: list = []  # per-tick apply_updates wall time
+        self.n_updates_applied = 0
+        self.update_summaries: list = []  # apply_updates summaries, in order
 
     # ------------------------------------------------------------- API ----
     def submit(self, query) -> int:
@@ -54,9 +70,23 @@ class MatchServer:
         self.queue.append(_Request(rid, query, time.perf_counter()))
         return rid
 
+    def submit_update(self, update) -> None:
+        """Queue one ``GraphUpdate``; applied at the start of a later tick
+        (before that tick's queries), preserving submission order."""
+        self.update_queue.append(update)
+
     def step(self) -> int:
-        """Serve one tick: up to ``max_batch`` queued queries through one
-        fused match_many.  Returns the number of queries served."""
+        """Serve one tick: apply up to ``max_updates_per_tick`` queued
+        graph updates as one index epoch, then fuse up to ``max_batch``
+        queued queries through one match_many.  Returns the number of
+        queries served."""
+        if self.update_queue:
+            n_upd = self.cfg.max_updates_per_tick
+            batch_u, self.update_queue = self.update_queue[:n_upd], self.update_queue[n_upd:]
+            t_u = time.perf_counter()
+            self.update_summaries.append(self.engine.apply_updates(batch_u))
+            self.update_s.append(time.perf_counter() - t_u)
+            self.n_updates_applied += len(batch_u)
         if not self.queue:
             return 0
         batch, self.queue = self.queue[: self.cfg.max_batch], self.queue[self.cfg.max_batch:]
@@ -75,6 +105,6 @@ class MatchServer:
 
     def run_until_drained(self, max_ticks: int = 10_000) -> dict:
         for _ in range(max_ticks):
-            if self.step() == 0:
+            if self.step() == 0 and not self.update_queue:
                 break
         return self.finished

@@ -195,3 +195,80 @@ def test_plan_oip_no_worse_than_aip_cost_is_reported():
     plan_oip = plan_query(q, 2, strategy="oip")
     # AIP explores a superset of initial paths → cost(AIP) ≤ cost(OIP)
     assert plan_aip.cost <= plan_oip.cost + 1e-9
+
+
+def test_plan_query_vectorized_matches_scalar_reference():
+    """The vectorized greedy candidate scoring (one NumPy pass per step)
+    must reproduce the original per-candidate scalar loop exactly —
+    same paths, same order, same cost, all strategies + custom weights."""
+    from repro.core.planner import candidate_plan_paths
+    from repro.graphs import random_connected_query
+
+    def plan_ref(q, length, strategy, weight_fn, seed, group_size=1):
+        # the pre-vectorization greedy loop, kept verbatim as the oracle
+        paths = candidate_plan_paths(q, length)
+        deg = q.degrees
+        scale = float(group_size) if group_size > 1 else 1.0
+        w = {p: scale * weight_fn(p) for p in paths}
+        start = int(np.argmax(deg))
+        through = [p for p in paths if start in p] or paths
+        rng = np.random.default_rng(seed)
+        if strategy == "oip":
+            initial = [min(through, key=lambda p: w[p])]
+        elif strategy == "aip":
+            initial = list(through)
+        else:
+            k = min(2, len(through))
+            initial = [through[i] for i in rng.choice(len(through), size=k, replace=False)]
+        sets = {p: frozenset(p) for p in paths}
+        best_q, best_cost = None, float("inf")
+        for p0 in initial:
+            local, order, cost, cov, stuck = {p0}, [p0], w[p0], set(p0), False
+            while len(cov) < q.n_vertices:
+                best_key = best_p = None
+                for p in paths:
+                    if p in local:
+                        continue
+                    inter = len(sets[p] & cov)
+                    if len(sets[p]) == inter:
+                        continue
+                    key = (inter == 0, inter, w[p])
+                    if best_key is None or key < best_key:
+                        best_key, best_p = key, p
+                if best_p is None:
+                    stuck = True
+                    break
+                local.add(best_p)
+                order.append(best_p)
+                cost += w[best_p]
+                cov |= sets[best_p]
+            if not stuck and cost < best_cost:
+                best_cost, best_q = cost, order
+        if best_q is None:
+            best_q = list(paths)
+            best_cost = sum(w.get(p, 0.0) for p in best_q)
+        return best_q, best_cost
+
+    g = erdos_renyi(120, avg_degree=4.0, n_labels=5, seed=2)
+    checked = 0
+    for s in range(12):
+        try:
+            q = random_connected_query(g, 4 + s % 5, seed=s)
+        except RuntimeError:
+            continue
+        deg = q.degrees
+        weights = [
+            ("deg", None, lambda p: -float(sum(deg[v] for v in p)), 1),
+            ("dr", lambda p: float((hash(p) % 7)), lambda p: float((hash(p) % 7)), 4),
+        ]
+        for strategy in ("aip", "oip", "eip"):
+            for wname, wfn, wfn_ref, gsz in weights:
+                plan = plan_query(
+                    q, 2, strategy=strategy, weight=wname,
+                    weight_fn=wfn, seed=s, group_size=gsz,
+                )
+                ref_paths, ref_cost = plan_ref(q, 2, strategy, wfn_ref, s, gsz)
+                assert plan.paths == ref_paths, (strategy, wname, s)
+                assert abs(plan.cost - ref_cost) < 1e-9
+                checked += 1
+    assert checked >= 30
