@@ -58,6 +58,22 @@ SPECS = {
     # repeat-heavy query streams) gate as booleans computed by the bench
     # itself — baseline-independent; the raw speedup ratios (≈8× / ≈90×)
     # stay ungated because their run-to-run variance dwarfs the 25% band.
+    # device merge-join vs the host join on a join-heavy batch.  Match
+    # identity and the no-host-round-trip property gate everywhere; the
+    # ≥1.2× device-over-host boolean arms on accelerator backends
+    # (device_join_gate_ok is computed by the bench — on the CPU
+    # container XLA sort/scatter throughput holds the device join at
+    # parity, exactly like the interpret-mode Pallas scan, and the
+    # parity ratio is tracked against the baseline band instead).
+    "BENCH_join.json": {
+        "lower_is_better": ["device_join_s", "numpy_join_s"],
+        "higher_is_better": ["join_speedup"],
+        "bool_true": [
+            "match_sets_identical",
+            "stacked_device_no_host_expansion",
+            "device_join_gate_ok",
+        ],
+    },
     "BENCH_updates.json": {
         "lower_is_better": ["delta_update_s", "cache_p50_ms"],
         "higher_is_better": ["cache_hit_rate"],

@@ -19,6 +19,7 @@ def main() -> None:
     from . import (
         bench_graph_scaling,
         bench_grouped,
+        bench_join,
         bench_offline,
         bench_online_batch,
         bench_params,
@@ -34,6 +35,7 @@ def main() -> None:
         ("grouped", bench_grouped.run),
         ("stacked", bench_stacked.run),
         ("updates", bench_updates.run),
+        ("join", bench_join.run),
         ("fig8_pruning", bench_pruning.run),
         ("fig9_baselines", bench_vs_baselines.run),
         ("fig7_params", bench_params.run),

@@ -10,6 +10,11 @@ workload: every K requests one random edge insertion/deletion batch is
 queued via ``submit_update``, and the server interleaves update ticks
 (delta index epochs, core/delta.py) with query ticks.  ``--cache``
 enables the signature-keyed result cache (serve/cache.py).
+``--join-impl device`` keeps candidate assembly + join + refine on the
+accelerator (core/matcher.py, batched per tick); ``--schedule cost``
+orders each tick's batch by the engine's cached plan cost so cheap
+queries aren't stuck behind expensive ones — per-tick p50/p95 are
+reported either way.
 
     PYTHONPATH=src python examples/serve_queries.py [--n 4000] [--requests 60]
     PYTHONPATH=src python examples/serve_queries.py --update-every 5 --cache
@@ -41,6 +46,16 @@ def main():
         "tensor probe vmapped/sharded over the local devices",
     )
     ap.add_argument(
+        "--join-impl", choices=["numpy", "device"], default="numpy",
+        help="candidate join + refine: the host sort-merge join, or the "
+        "jitted device merge-join pipeline (kernels/merge_join)",
+    )
+    ap.add_argument(
+        "--schedule", choices=["fifo", "cost"], default="fifo",
+        help="tick scheduling: submission order, or cost-ranked by the "
+        "engine's cached plan cost (cheap queries first)",
+    )
+    ap.add_argument(
         "--update-every", type=int, default=0,
         help="mixed live stream: queue one random edge add/remove batch "
         "every N requests (0 = query-only stream)",
@@ -58,7 +73,8 @@ def main():
         GnnPeConfig(
             encoder="monotone", n_partitions=max(args.n // 1000, 1), n_multi=2,
             index_kind=args.index_kind, group_size=args.group_size,
-            probe_impl=args.probe_impl, cache=args.cache,
+            probe_impl=args.probe_impl, join_impl=args.join_impl,
+            cache=args.cache,
         )
     ).build(g)
     if args.probe_impl == "stacked":
@@ -81,7 +97,9 @@ def main():
     # request stream: mixed query sizes, fused into batches by MatchServer;
     # with --update-every, update ticks interleave with the query ticks
     rng = np.random.default_rng(0)
-    server = MatchServer(engine, MatchServeConfig(max_batch=args.batch))
+    server = MatchServer(
+        engine, MatchServeConfig(max_batch=args.batch, schedule=args.schedule)
+    )
     sent = {}
     verifiable = set()  # rids served at the final graph epoch
     t_serve = time.perf_counter()
@@ -127,6 +145,24 @@ def main():
         f"p99={lat_ms[min(int(len(lat)*0.99), len(lat)-1)]:.1f}ms | "
         f"{n_matches} total matches | exactness verified on {verified} samples"
     )
+    ticks = [t["wall_s"] for t in server.tick_stats]
+    if ticks:
+        tms = np.sort(np.asarray(ticks)) * 1e3
+        spans = [
+            (t["min_cost"], t["max_cost"])
+            for t in server.tick_stats
+            if t["max_cost"] is not None
+        ]
+        span_txt = (
+            f" | cost span (last tick) {spans[-1][0]:.0f}..{spans[-1][1]:.0f}"
+            if spans
+            else ""
+        )
+        print(
+            f"[serve] {len(ticks)} query ticks ({args.schedule}): "
+            f"tick p50={tms[len(tms)//2]:.1f}ms "
+            f"p95={tms[min(int(len(tms)*0.95), len(tms)-1)]:.1f}ms{span_txt}"
+        )
     if server.n_updates_applied:
         ds = engine.delta_stats()
         print(

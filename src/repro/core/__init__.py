@@ -12,7 +12,13 @@ from .index import (
     query_index_batch_multi,
     reset_pair_counters,
 )
-from .matcher import join_candidates, match_from_candidates, refine, sort_matches
+from .matcher import (
+    join_candidates,
+    match_from_candidates,
+    match_from_candidates_many,
+    refine,
+    sort_matches,
+)
 from .paths import concat_path_embeddings, enumerate_paths
 from .planner import QueryPlan, canonical_form, plan_query
 from .stacked import StackedIndex, build_stacked, plan_shards
@@ -57,6 +63,7 @@ __all__ = [
     "build_pair_dataset",
     "subset_table",
     "join_candidates",
+    "match_from_candidates_many",
     "refine",
     "match_from_candidates",
     "sort_matches",

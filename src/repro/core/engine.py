@@ -59,7 +59,7 @@ from .index import (
     query_index,
     query_index_batch_multi,
 )
-from .matcher import match_from_candidates
+from .matcher import match_from_candidates, match_from_candidates_many
 from .paths import concat_path_embeddings, enumerate_paths
 from .planner import QueryPlan, candidate_plan_paths, canonical_form, plan_query
 from .stars import build_pair_dataset, build_star_tensors
@@ -91,6 +91,11 @@ class GnnPeConfig:
     # leaf-level dominance comparisons (see core/grouping.py)
     index_kind: str = "path"
     group_size: int = 16  # max paths bundled per group ("grouped" only)
+    # "fixed" groups every partition at ``group_size``; "auto" picks a
+    # per-partition size from {8, 16, 32} at build time using the
+    # grouping pass's fan-out stats (core/grouping.choose_group_size),
+    # falling back to ``group_size`` semantics partition by partition
+    group_size_mode: str = "fixed"
     plan_strategy: str = "aip"
     plan_weight: str = "deg"
     induced: bool = False
@@ -101,6 +106,12 @@ class GnnPeConfig:
     # vmapped descent, shard_map'd over the local devices' ("part",)
     # mesh (core/stacked.py + dist/probe.py) — identical match sets
     probe_impl: str = "loop"
+    # candidate join + refine backend (core/matcher.py): "numpy" is the
+    # host sort-merge join (the oracle); "device" drives the jitted
+    # kernels/merge_join pipeline — with probe_impl="stacked" the leaf
+    # member-expansion output feeds it without leaving the device.
+    # Match SETS are identical (sort_matches order)
+    join_impl: str = "numpy"
     # fused leaf scan backend: None = auto (Pallas kernel on TPU, the
     # bit-equal vectorized NumPy reference on CPU — interpret-mode Pallas
     # is an emulation, ~25× slower than XLA on the same work);
@@ -204,6 +215,14 @@ class GnnPeEngine:
             raise ValueError(
                 f"unknown probe_impl {cfg.probe_impl!r}; use 'loop' or 'stacked'"
             )
+        if cfg.join_impl not in ("numpy", "device"):
+            raise ValueError(
+                f"unknown join_impl {cfg.join_impl!r}; use 'numpy' or 'device'"
+            )
+        if cfg.group_size_mode not in ("fixed", "auto"):
+            raise ValueError(
+                f"unknown group_size_mode {cfg.group_size_mode!r}; use 'fixed' or 'auto'"
+            )
         t0 = time.perf_counter()
         self.graph = g
         self.n_labels = int(g.labels.max()) + 1 if g.n_vertices else 1
@@ -278,7 +297,7 @@ class GnnPeEngine:
                 path_labels=g.labels[paths] if cfg.quantize_index else None,
             )
             if cfg.index_kind == "grouped":
-                attach_groups(index, cfg.group_size)
+                self._attach_partition_groups(index)
             index_time += time.perf_counter() - t3
             vset64 = vset.astype(np.int64)
             self.models.append(
@@ -316,6 +335,9 @@ class GnnPeEngine:
             "n_groups": int(
                 sum(m.index.groups.n_groups for m in self.models if m.index.groups)
             ),
+            "group_sizes": [
+                int(m.index.groups.group_size) for m in self.models if m.index.groups
+            ],
             "group_bytes": int(
                 sum(m.index.groups.nbytes() for m in self.models if m.index.groups)
             ),
@@ -334,6 +356,17 @@ class GnnPeEngine:
         if cfg.probe_impl == "stacked" and self.models:
             self.stacked_probe()  # eager: pay stacking offline, report bytes
         return self
+
+    def _attach_partition_groups(self, index) -> None:
+        """Attach the group sidecar: the tuned per-partition pick under
+        ``group_size_mode="auto"`` (reusing the winning trial grouping),
+        else the global ``cfg.group_size``."""
+        if self.cfg.group_size_mode == "auto":
+            from .grouping import _best_grouping
+
+            index.groups = _best_grouping(index)[1]
+        else:
+            attach_groups(index, self.cfg.group_size)
 
     def stacked_probe(self):
         """The dense stacked-tensor probe over every partition's index
@@ -700,7 +733,7 @@ class GnnPeEngine:
                 path_labels=g.labels[paths] if cfg.quantize_index else None,
             )
             if cfg.index_kind == "grouped":
-                attach_groups(index, cfg.group_size)
+                self._attach_partition_groups(index)
             model.node_emb = node_emb
             model.node_emb0 = node_emb0
             model.node_emb_multi = node_emb_multi
@@ -800,6 +833,33 @@ class GnnPeEngine:
         perm, full_key = self._dr_plan_key(q, group_size)
         return self._plan_cache_get(q, full_key, perm)
 
+    def _deg_plan_cached(self, q: Graph) -> QueryPlan:
+        """The ``weight="deg"`` plan under the canonical-signature cache
+        — the shared implementation behind ``_plan_cached``'s deg branch
+        and ``plan_cost`` (one cache, one key construction)."""
+        cfg = self.cfg
+        perm, key = canonical_form(q)
+        full_key = (key, cfg.path_length, cfg.plan_strategy, cfg.seed)
+        hit = self._plan_cache_get(q, full_key, perm)
+        if hit is not None:
+            return hit
+        plan = plan_query(
+            q, cfg.path_length,
+            strategy=cfg.plan_strategy, weight="deg", seed=cfg.seed,
+        )
+        self._plan_cache_put(q, full_key, perm, plan)
+        return plan
+
+    def plan_cost(self, q: Graph) -> float:
+        """Cheap cost estimate for scheduling: the cached ``weight="deg"``
+        plan's cost (canonical-signature cache, so repeated and
+        relabeled-isomorphic queries are one planner run).  Cost is
+        computed on canonical ids and invariant under the relabeling, so
+        the cached canonical plan's cost serves every isomorphic copy —
+        MatchServer's cost-ranked tick ordering reads this.
+        """
+        return float(self._deg_plan_cached(q).cost)
+
     def _plan_cached(
         self, q: Graph, weight_fn=None, group_size: int = 1
     ) -> QueryPlan:
@@ -833,17 +893,7 @@ class GnnPeEngine:
                 strategy=cfg.plan_strategy, weight=cfg.plan_weight,
                 weight_fn=weight_fn, seed=cfg.seed, group_size=group_size,
             )
-        perm, key = canonical_form(q)
-        full_key = (key, cfg.path_length, cfg.plan_strategy, cfg.seed)
-        hit = self._plan_cache_get(q, full_key, perm)
-        if hit is not None:
-            return hit
-        plan = plan_query(
-            q, cfg.path_length,
-            strategy=cfg.plan_strategy, weight="deg", seed=cfg.seed,
-        )
-        self._plan_cache_put(q, full_key, perm, plan)
-        return plan
+        return self._deg_plan_cached(q)
 
     def match(
         self,
@@ -851,26 +901,30 @@ class GnnPeEngine:
         return_stats: bool = False,
         impl: str | None = None,
         probe_impl: str | None = None,
+        join_impl: str | None = None,
     ):
         """Exact subgraph matching of query q (Alg. 3).
 
         ``impl`` overrides ``cfg.online_impl``: "batched" routes through
         ``match_many`` (the fused hot path); "scalar" runs the original
         per-(partition, path) loop (cross-check / benchmark baseline).
-        ``probe_impl`` selects the index traversal ("loop" | "stacked").
+        ``probe_impl`` selects the index traversal ("loop" | "stacked");
+        ``join_impl`` the join/refine backend ("numpy" | "device").
         """
         impl = impl or self.cfg.online_impl
         if impl == "batched":
-            out = self.match_many([q], return_stats=return_stats, probe_impl=probe_impl)
+            out = self.match_many(
+                [q], return_stats=return_stats, probe_impl=probe_impl, join_impl=join_impl
+            )
             if return_stats:
                 matches, stats = out
                 return matches[0], stats[0]
             return out[0]
         if impl != "scalar":
             raise ValueError(f"unknown online impl {impl!r}; use 'batched' or 'scalar'")
-        return self._match_scalar(q, return_stats=return_stats)
+        return self._match_scalar(q, return_stats=return_stats, join_impl=join_impl)
 
-    def _match_scalar(self, q: Graph, return_stats: bool = False):
+    def _match_scalar(self, q: Graph, return_stats: bool = False, join_impl: str | None = None):
         assert self.graph is not None, "call build() first"
         cfg = self.cfg
         stats = QueryStats()
@@ -965,7 +1019,13 @@ class GnnPeEngine:
         stats.pruning_power = 1.0 - cand_total / max(stats.total_paths, 1)
         # join + refine
         t1 = time.perf_counter()
-        matches = match_from_candidates(self.graph, q, plan.paths, cand_arrays, induced=cfg.induced)
+        # per-path candidates are duplicate-free (partitions are root-
+        # disjoint; delta rows are disjoint from live main rows), so the
+        # join may skip its dedup sorts
+        matches = match_from_candidates(
+            self.graph, q, plan.paths, cand_arrays, induced=cfg.induced,
+            join_impl=join_impl or cfg.join_impl, assume_unique=True,
+        )
         stats.join_time = time.perf_counter() - t1
         stats.n_matches = len(matches)
         if return_stats:
@@ -1034,6 +1094,36 @@ class GnnPeEngine:
         ]
         return cat, spans
 
+    def _stacked_live_mask(self, probe) -> np.ndarray | None:
+        """(S, P_max) liveness over the stacked leaf rows (False =
+        tombstoned) for the device-resident leaf stage, or None when no
+        partition carries tombstones (the common case).
+
+        Tombstones only change inside ``apply_updates`` (which bumps the
+        epoch — compaction resets them in the same call), so the mask is
+        cached per (epoch, stacked-probe identity) instead of being
+        rebuilt and re-uploaded on every probe batch of a live-serving
+        tick."""
+        if self.delta is None:
+            return None
+        cached = getattr(self, "_live_mask_cache", None)
+        if cached is not None and cached[0] == self.epoch and cached[1] is probe.stacked:
+            return cached[2]
+        st = probe.stacked
+        mask = None
+        for mi in range(min(len(self.models), len(self.delta.parts))):
+            dp = self.delta.parts[mi]
+            if dp.n_tomb:
+                if mask is None:
+                    mask = np.ones((st.n_slots, st.emb_cat.shape[1]), bool)
+                s = int(st.slot_of[mi])
+                n = min(dp.tombstone.size, mask.shape[1])
+                mask[s, :n] = ~dp.tombstone[:n]
+        if mask is not None:
+            mask = jnp.asarray(mask)  # upload once per epoch, not per probe
+        self._live_mask_cache = (self.epoch, probe.stacked, mask)
+        return mask
+
     def _probe_batch(
         self,
         requests: list,
@@ -1044,6 +1134,8 @@ class GnnPeEngine:
         stats_memo: dict | None = None,
         probe_impl: str | None = None,
         delta_memo: dict | None = None,
+        dev_memo: dict | None = None,
+        dev_counts: dict | None = None,
     ) -> None:
         """One fused index probe for many (query, path) pairs × partitions.
 
@@ -1118,17 +1210,38 @@ class GnnPeEngine:
                 q_multi = (
                     np.stack([t[2] for t in per_part], axis=1) if cfg.n_multi else None
                 )
-                out = probe.probe(
-                    q_emb, q_emb0, q_multi, q_label_hash=qh,
-                    use_groups=use_groups, use_pallas=use_pallas,
-                    return_stats=stats_memo is not None,
-                )
-                results, stats = out if stats_memo is not None else (out, None)
-                for mi in range(m):
+                if dev_memo is not None:
+                    # §device join: candidate vertices assemble on device,
+                    # tombstones filter via the liveness mask — no host-side
+                    # member expansion, no per-row result transfer
+                    out = probe.probe_device(
+                        q_emb, q_emb0, q_multi, q_label_hash=qh,
+                        use_groups=use_groups, use_pallas=use_pallas,
+                        return_stats=stats_memo is not None,
+                        live_mask=self._stacked_live_mask(probe),
+                    )
+                    if stats_memo is not None:
+                        per_b, part_counts, stats = out
+                    else:
+                        per_b, part_counts = out
                     for b, (qi, p) in enumerate(sel):
-                        memo[(mi, qi, p)] = self._live_rows(mi, results[mi][b])
-                        if stats_memo is not None:
-                            stats_memo[(mi, qi, p)] = stats[mi][b]
+                        dev_memo[(qi, p)] = per_b[b]
+                        for mi in range(m):
+                            dev_counts[(mi, qi, p)] = int(part_counts[mi, b])
+                            if stats_memo is not None:
+                                stats_memo[(mi, qi, p)] = stats[mi][b]
+                else:
+                    out = probe.probe(
+                        q_emb, q_emb0, q_multi, q_label_hash=qh,
+                        use_groups=use_groups, use_pallas=use_pallas,
+                        return_stats=stats_memo is not None,
+                    )
+                    results, stats = out if stats_memo is not None else (out, None)
+                    for mi in range(m):
+                        for b, (qi, p) in enumerate(sel):
+                            memo[(mi, qi, p)] = self._live_rows(mi, results[mi][b])
+                            if stats_memo is not None:
+                                stats_memo[(mi, qi, p)] = stats[mi][b]
         else:
             items = []
             sels = []
@@ -1188,6 +1301,7 @@ class GnnPeEngine:
         return_stats: bool = False,
         index_kind: str | None = None,
         probe_impl: str | None = None,
+        join_impl: str | None = None,
     ):
         """Exact subgraph matching for a batch of queries (fused Alg. 3).
 
@@ -1217,12 +1331,15 @@ class GnnPeEngine:
         impl = probe_impl or cfg.probe_impl
         if impl not in ("loop", "stacked"):
             raise ValueError(f"unknown probe_impl {impl!r}; use 'loop' or 'stacked'")
+        jimpl = join_impl or cfg.join_impl
+        if jimpl not in ("numpy", "device"):
+            raise ValueError(f"unknown join_impl {jimpl!r}; use 'numpy' or 'device'")
         nq = len(queries)
         if nq == 0:
             return ([], []) if return_stats else []
         cache = self._result_cache
         if cache is None:
-            results, stats, _ = self._match_many_core(queries, kind, impl)
+            results, stats, _ = self._match_many_core(queries, kind, impl, jimpl)
             return (results, stats) if return_stats else results
         from ..serve.cache import canonical_matches, remap_matches
 
@@ -1248,7 +1365,7 @@ class GnnPeEngine:
                 miss.append(qi)
         if miss:
             sub_results, sub_stats, contributing = self._match_many_core(
-                [queries[qi] for qi in miss], kind, impl
+                [queries[qi] for qi in miss], kind, impl, jimpl
             )
             for k, qi in enumerate(miss):
                 results[qi] = sub_results[k]
@@ -1276,11 +1393,18 @@ class GnnPeEngine:
                 )
         return (results, stats) if return_stats else results
 
-    def _match_many_core(self, queries: list, kind: str, impl: str):
+    def _match_many_core(self, queries: list, kind: str, impl: str, join_impl: str = "numpy"):
         """The fused batch pipeline (no result cache).  Returns
         ``(results, stats, contributing)`` where ``contributing[qi]`` is
         the set of partition (model) indices that produced candidate
-        rows — what the result cache scopes its invalidation on."""
+        rows — what the result cache scopes its invalidation on.
+
+        With ``join_impl="device"`` and the stacked probe, the probe
+        hands back device-resident candidate vertex arrays (``dev_memo``)
+        plus per-partition counts (``dev_counts``) — the join consumes
+        them without a host round-trip; delta-buffer rows (small by
+        construction) upload alongside.
+        """
         cfg = self.cfg
         use_groups = kind == "grouped"
         nq = len(queries)
@@ -1291,6 +1415,9 @@ class GnnPeEngine:
         delta_memo: dict = {}
         delta = self.delta
         n_models = len(self.models)
+        device_assembly = join_impl == "device" and impl == "stacked" and n_models > 0
+        dev_memo: dict | None = {} if device_assembly else None
+        dev_counts: dict = {}
         # ---- plans (dr probes ride the same batched pipeline) -----------
         weight_fns: list = [None] * nq
         cached_plans: list = [None] * nq
@@ -1310,7 +1437,7 @@ class GnnPeEngine:
                 self._probe_batch(
                     probe_reqs, queries, q_embs, memo,
                     use_groups=use_groups, stats_memo=stats_memo, probe_impl=impl,
-                    delta_memo=delta_memo,
+                    delta_memo=delta_memo, dev_memo=dev_memo, dev_counts=dev_counts,
                 )
 
             def _delta_rows(mi, qi, p):
@@ -1346,13 +1473,20 @@ class GnnPeEngine:
 
                 def make_weight_fn(qi):
                     def weight_fn(p):
-                        return float(
+                        main = (
                             sum(
+                                dev_counts.get((mi, qi, p), 0)
+                                for mi in range(n_models)
+                            )
+                            if device_assembly
+                            else sum(
                                 memo[(mi, qi, p)].size
                                 for mi in range(n_models)
                                 if (mi, qi, p) in memo
                             )
-                            + sum(_delta_rows(mi, qi, p) for mi in range(n_models))
+                        )
+                        return float(
+                            main + sum(_delta_rows(mi, qi, p) for mi in range(n_models))
                         )
 
                     return weight_fn
@@ -1372,20 +1506,23 @@ class GnnPeEngine:
             (qi, p)
             for qi, plan in enumerate(plans)
             for p in plan.paths
-            if not any(
-                (mi, qi, p) in memo or (mi, qi, p) in delta_memo
-                for mi in range(n_models)
+            if not (
+                (dev_memo is not None and (qi, p) in dev_memo)
+                or any(
+                    (mi, qi, p) in memo or (mi, qi, p) in delta_memo
+                    for mi in range(n_models)
+                )
             )
         ]
         if todo:
             self._probe_batch(
                 todo, queries, q_embs, memo, use_groups=use_groups, probe_impl=impl,
-                delta_memo=delta_memo,
+                delta_memo=delta_memo, dev_memo=dev_memo, dev_counts=dev_counts,
             )
         filter_time = time.perf_counter() - t0
-        # ---- per-query candidate assembly + join + refine ---------------
-        results = []
+        # ---- per-query candidate assembly -------------------------------
         contributing: list[set] = [set() for _ in range(nq)]
+        per_query_cands: list = []
         for qi, (q, plan) in enumerate(zip(queries, plans)):
             st = stats[qi]
             st.plan = plan
@@ -1400,10 +1537,14 @@ class GnnPeEngine:
                     continue
                 total_paths += n_live
                 for pi, p in enumerate(plan.paths):
-                    rows = memo.get((mi, qi, p))
-                    if rows is not None and rows.size:
-                        candidates[pi].append(model.index.paths[rows])
-                        contributing[qi].add(mi)
+                    if device_assembly:
+                        if dev_counts.get((mi, qi, p), 0):
+                            contributing[qi].add(mi)
+                    else:
+                        rows = memo.get((mi, qi, p))
+                        if rows is not None and rows.size:
+                            candidates[pi].append(model.index.paths[rows])
+                            contributing[qi].add(mi)
                     if dp is not None:
                         drows = delta_memo.get((mi, qi, p))
                         if drows is not None and drows.size:
@@ -1412,22 +1553,66 @@ class GnnPeEngine:
             cand_arrays = []
             cand_total = 0
             for pi, parts in enumerate(candidates):
-                if parts:
+                if device_assembly:
+                    # device rows straight from the probe; delta-buffer
+                    # rows (host, small) ride along as one upload
+                    ent = dev_memo.get((qi, plan.paths[pi]))
+                    arr = self._device_candidates(ent, parts, len(plan.paths[pi]))
+                    n_rows = arr[1]
+                elif parts:
                     arr = np.concatenate(parts, axis=0)
+                    n_rows = arr.shape[0]
                 else:
                     arr = np.zeros((0, len(plan.paths[pi])), np.int32)
+                    n_rows = 0
                 cand_arrays.append(arr)
-                cand_total += arr.shape[0]
-                st.n_candidates[plan.paths[pi]] = int(arr.shape[0])
+                cand_total += n_rows
+                st.n_candidates[plan.paths[pi]] = int(n_rows)
+            per_query_cands.append(cand_arrays)
             st.filter_time = filter_time / nq  # batch stage, amortized
             st.total_paths = total_paths * max(len(plan.paths), 1)
             st.candidate_paths = cand_total
             st.pruning_power = 1.0 - cand_total / max(st.total_paths, 1)
+        # ---- join + refine ----------------------------------------------
+        # per-path candidates are duplicate-free (partitions are root-
+        # disjoint; delta rows are disjoint from live main rows), so the
+        # join may skip its dedup sorts (assume_unique)
+        if join_impl == "device":
+            # one vmapped device program per join step for every group of
+            # same-plan queries — the tick-level batched join
             t1 = time.perf_counter()
-            matches = match_from_candidates(
-                self.graph, q, plan.paths, cand_arrays, induced=cfg.induced
+            results = match_from_candidates_many(
+                self.graph, queries, [plan.paths for plan in plans], per_query_cands,
+                induced=cfg.induced, join_impl="device", assume_unique=True,
             )
-            st.join_time = time.perf_counter() - t1
-            st.n_matches = len(matches)
-            results.append(matches)
+            join_time = time.perf_counter() - t1
+            for qi, matches in enumerate(results):
+                stats[qi].join_time = join_time / nq  # batch stage, amortized
+                stats[qi].n_matches = len(matches)
+        else:
+            results = []
+            for qi, (q, plan) in enumerate(zip(queries, plans)):
+                t1 = time.perf_counter()
+                matches = match_from_candidates(
+                    self.graph, q, plan.paths, per_query_cands[qi],
+                    induced=cfg.induced, join_impl="numpy", assume_unique=True,
+                )
+                stats[qi].join_time = time.perf_counter() - t1
+                stats[qi].n_matches = len(matches)
+                results.append(matches)
         return results, stats, contributing
+
+    @staticmethod
+    def _device_candidates(ent, host_parts: list, path_len: int):
+        """Combine a probe's device candidate rows with host delta rows
+        into one ``(rows, count)`` pair for the device join."""
+        dev_rows, dev_cnt = ent if ent is not None else (None, 0)
+        if not host_parts:
+            if dev_rows is None:
+                return np.zeros((0, path_len), np.int32), 0
+            return dev_rows, dev_cnt
+        extra = np.concatenate(host_parts, axis=0).astype(np.int32)
+        if dev_cnt == 0:
+            return jnp.asarray(extra), extra.shape[0]
+        merged = jnp.concatenate([dev_rows[:dev_cnt], jnp.asarray(extra)], axis=0)
+        return merged, dev_cnt + extra.shape[0]

@@ -30,7 +30,11 @@ import numpy as np
 
 from .index import PackedGroupIndex, PackedIndex
 
-__all__ = ["group_paths", "attach_groups"]
+__all__ = ["group_paths", "attach_groups", "choose_group_size", "GROUP_SIZE_CANDIDATES"]
+
+# candidate sizes the per-partition tuner picks from (ROADMAP GNN-PGE
+# follow-up): powers of two bracketing the global default of 16
+GROUP_SIZE_CANDIDATES = (8, 16, 32)
 
 
 def _group_boundaries(index: PackedIndex, group_size: int) -> np.ndarray:
@@ -101,6 +105,47 @@ def group_paths(index: PackedIndex, group_size: int = 16) -> PackedGroupIndex:
         block_group_start=block_group_start,
         group_size=group_size,
     )
+
+
+def choose_group_size(
+    index: PackedIndex, candidates: tuple = GROUP_SIZE_CANDIDATES
+) -> int:
+    """Pick a per-partition group size from the grouping pass's own
+    fan-out statistics (no queries needed at build time).
+
+    The two-level probe pays one bound check per group in a surviving
+    block, and a *label-mixed* group (its MBR₀ is a genuine interval, not
+    a point) is the one that tends to survive spuriously and leak its
+    whole member fan-out into the leaf scan.  So the trial grouping at
+    each candidate size is scored by
+
+        score(gsz) = n_groups  +  Σ over label-mixed groups of members
+
+    (checks issued + expected leaked leaf work, both in row units) and
+    the argmin wins, larger sizes taking ties (fewer checks for the same
+    leak).  A label-homogeneous partition therefore drifts to 32, a
+    high-label-cardinality one to 8, and the default 16 holds the middle
+    — the engine's ``group_size_mode="auto"`` calls this per partition,
+    keeping the configured global size as the "fixed" fallback.
+    """
+    return _best_grouping(index, candidates)[0]
+
+
+def _best_grouping(index: PackedIndex, candidates: tuple = GROUP_SIZE_CANDIDATES):
+    """(winning size, its already-built sidecar) — callers that attach
+    the winner (engine auto mode) reuse the trial instead of grouping a
+    fourth time."""
+    if index.n_paths == 0:
+        return int(candidates[0]), group_paths(index, int(candidates[0]))
+    best = None
+    for gsz in sorted(int(c) for c in candidates):
+        g = group_paths(index, gsz)
+        counts = g.member_counts()
+        mixed = np.any(g.mbr0[:, :, 0] != g.mbr0[:, :, 1], axis=1)
+        score = g.n_groups + int(counts[mixed].sum())
+        if best is None or score <= best[0]:
+            best = (score, gsz, g)
+    return best[1], best[2]
 
 
 def attach_groups(index: PackedIndex, group_size: int = 16) -> PackedIndex:

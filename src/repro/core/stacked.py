@@ -227,11 +227,15 @@ def _stack_groups(
     live = [ix for ix in indexes if ix.n_paths]
     if not live or any(ix.groups is None for ix in live):
         return None
-    group_size = int(live[0].groups.group_size)
-    if any(int(ix.groups.group_size) != group_size for ix in live):
-        raise ValueError("stacked partitions must share group_size")
+    # partitions may carry DIFFERENT group sizes (group_size_mode="auto"
+    # tunes per partition): slot capacity follows the finest grouping —
+    # gpb = max over partitions of ceil(block_size / its group_size) —
+    # and coarser partitions simply leave trailing slots empty (zero
+    # counts, reject bounds).  ``group_size`` records the smallest size
+    # (the one that set the capacity).
     bs = live[0].block_size
-    gpb = (bs + group_size - 1) // group_size
+    group_size = min(int(ix.groups.group_size) for ix in live)
+    gpb = max((bs + int(ix.groups.group_size) - 1) // int(ix.groups.group_size) for ix in live)
     G = n_leaf_blocks * gpb
     hi = np.full((n_slots, G, d_cat), -np.inf, np.float32)
     lo0 = np.full((n_slots, G, d0), np.inf, np.float32)
@@ -417,8 +421,14 @@ def restack_slot(st: StackedIndex, slot: int, index: PackedIndex) -> bool:
             return False  # deeper forest than the stacked layout holds
         if (st.groups is not None) != (index.groups is not None):
             return False
-        if st.groups is not None and int(index.groups.group_size) != st.groups.group_size:
-            return False
+        if st.groups is not None:
+            # heterogeneous per-partition sizes are fine as long as the
+            # incoming grouping still fits the stacked slot capacity
+            need_gpb = (index.block_size + int(index.groups.group_size) - 1) // int(
+                index.groups.group_size
+            )
+            if need_gpb > st.groups.gpb:
+                return False
 
     P = index.n_paths
 

@@ -1,0 +1,112 @@
+"""NumPy oracle for the device merge-join op family.
+
+The host join in ``core/matcher.py`` packs each row into ONE uint64 (or a
+void-byte scalar for wide rows) because NumPy has 64-bit integers.  The
+device ops cannot — this JAX build runs without ``jax_enable_x64`` — so
+the shared representation is a **multi-word key**: a row of ``C``
+non-negative int32 columns, each below ``2**bits`` (``bits <= 31``),
+packs MSB-first into ``K = ceil(C*bits / 31)`` int32 words of 31 payload
+bits.  Word-wise lexicographic order of the packed words equals
+lexicographic order of the rows, and word-wise equality equals row
+equality — exactly the two properties every sort/search/dedup below
+needs.  These references pin that semantics for the jitted wrappers in
+``ops.py`` (tests compare them element-for-element).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "pack_words_ref",
+    "run_bounds_ref",
+    "expand_pairs_ref",
+    "injectivity_mask_ref",
+    "dedup_mask_ref",
+]
+
+
+def pack_words_ref(rows: np.ndarray, bits: int) -> np.ndarray:
+    """(R, C) non-negative ints < 2**bits → (R, K) int32 key words.
+
+    Conceptually the row is one big ``C*bits``-bit integer (column 0 most
+    significant); it is left-padded with zeros to ``K*31`` bits and split
+    into K words of 31 bits.  Every word is < 2**31, so signed int32
+    comparison orders words like the unsigned payload.
+    """
+    if not (1 <= bits <= 31):
+        raise ValueError(f"bits must be in [1, 31], got {bits}")
+    R, C = rows.shape
+    B = C * bits
+    K = max((B + 30) // 31, 1)
+    pad = K * 31 - B
+    words = np.zeros((R, K), np.int64)
+    for j in range(C):
+        v = rows[:, j].astype(np.int64)
+        start = pad + j * bits
+        end = start + bits
+        wa, wb = start // 31, (end - 1) // 31
+        if wa == wb:
+            words[:, wa] |= v << (31 * (wa + 1) - end)
+        else:  # a column straddles at most one word boundary (bits <= 31)
+            n_lo = end - 31 * wb
+            words[:, wa] |= v >> n_lo
+            words[:, wb] |= (v & ((1 << n_lo) - 1)) << (31 * (wb + 1) - end)
+    return words.astype(np.int32)
+
+
+def _void_view(words: np.ndarray) -> np.ndarray:
+    """Big-endian byte view: memcmp order == word-lex order (words >= 0)."""
+    b = np.ascontiguousarray(words.astype(">i4"))
+    return b.view(np.dtype((np.void, 4 * words.shape[1]))).ravel()
+
+
+def run_bounds_ref(sorted_words: np.ndarray, probe_words: np.ndarray):
+    """For each probe key, the [lo, hi) run of equal keys in the sorted
+    key array — the sort-merge join's inner binary search."""
+    s = _void_view(sorted_words)
+    p = _void_view(probe_words)
+    return np.searchsorted(s, p, side="left"), np.searchsorted(s, p, side="right")
+
+
+def expand_pairs_ref(lo: np.ndarray, hi: np.ndarray, cap: int):
+    """Run-length pair expansion: probe i pairs with sorted rows
+    [lo[i], hi[i]).  Returns (r, c, valid) padded to ``cap`` rows."""
+    reps = hi - lo
+    total = int(reps.sum())
+    if total > cap:
+        raise ValueError(f"cap {cap} < total pairs {total}")
+    r = np.repeat(np.arange(lo.shape[0]), reps)
+    ends = np.cumsum(reps)
+    pos = np.arange(total) - np.repeat(ends - reps, reps)
+    c = np.repeat(lo, reps) + pos
+    pad = cap - total
+    r = np.concatenate([r, np.zeros(pad, r.dtype)])
+    c = np.concatenate([c, np.zeros(pad, c.dtype)])
+    valid = np.arange(cap) < total
+    return r.astype(np.int32), c.astype(np.int32), valid
+
+
+def injectivity_mask_ref(old: np.ndarray, new: np.ndarray) -> np.ndarray:
+    """Row-aligned injectivity verdict: keep[t] iff no new column of row t
+    collides with an old column or another new column (the join's
+    partial-assignment consistency check)."""
+    T = old.shape[0]
+    ok = np.ones(T, bool)
+    for j in range(new.shape[1]):
+        ok &= ~np.any(old == new[:, j : j + 1], axis=1)
+        for j2 in range(j + 1, new.shape[1]):
+            ok &= new[:, j] != new[:, j2]
+    return ok
+
+
+def dedup_mask_ref(words: np.ndarray, valid: np.ndarray):
+    """Row dedup over packed keys: a stable sort order of the keys (with
+    invalid rows forced last) and the first-occurrence keep mask aligned
+    to that order."""
+    aug = np.concatenate([(~valid[:, None]).astype(np.int32), words], axis=1)
+    order = np.argsort(_void_view(aug), kind="stable")
+    ws = words[order]
+    keep = valid[order].copy()
+    same = np.all(ws[1:] == ws[:-1], axis=1)
+    keep[1:] &= ~same
+    return order.astype(np.int32), keep

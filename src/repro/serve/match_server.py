@@ -7,6 +7,12 @@ probe per partition, one Pallas leaf scan per partition for the whole
 tick.  Queries of mixed sizes batch fine (the probe batch stacks path
 embeddings, not query graphs).
 
+Scheduling: ``schedule="cost"`` orders every tick's batch by the
+engine's cached plan cost (``GnnPeEngine.plan_cost`` — one planner run
+per distinct query signature), so a burst of cheap queries drains ahead
+of an expensive straggler instead of queueing behind it; per-tick
+latency/cost spans land in ``tick_stats``.
+
 Live graphs (§delta): ``submit_update`` queues ``GraphUpdate`` batches
 alongside queries; each tick first coalesces up to
 ``max_updates_per_tick`` of them into ONE ``engine.apply_updates``
@@ -38,6 +44,15 @@ class MatchServeConfig:
     # "stacked" probes the dense stacked-tensor index, sharded over the
     # local device mesh (dist/probe.py)
     probe_impl: str | None = None
+    # join/refine backend override ("numpy" | "device" | None = engine
+    # config); "device" keeps candidate assembly on the accelerator
+    # (core/matcher.py join_impl)
+    join_impl: str | None = None
+    # tick scheduling: "fifo" drains the queue in submission order;
+    # "cost" orders each tick's batch by the engine's cached plan cost
+    # (cheapest first, submission order breaking ties) so one expensive
+    # query cannot hold a tick's worth of cheap ones behind it
+    schedule: str = "fifo"
     # graph updates coalesced into one apply_updates epoch per tick
     max_updates_per_tick: int = 4
 
@@ -47,10 +62,13 @@ class _Request:
     request_id: int
     query: object  # Graph
     t_submit: float
+    cost: float | None = None  # cached plan cost (schedule="cost")
 
 
 class MatchServer:
     def __init__(self, engine, cfg: MatchServeConfig = MatchServeConfig()):
+        if cfg.schedule not in ("fifo", "cost"):
+            raise ValueError(f"unknown schedule {cfg.schedule!r}; use 'fifo' or 'cost'")
         self.engine = engine
         self.cfg = cfg
         self.queue: list[_Request] = []
@@ -62,12 +80,17 @@ class MatchServer:
         self.update_s: list = []  # per-tick apply_updates wall time
         self.n_updates_applied = 0
         self.update_summaries: list = []  # apply_updates summaries, in order
+        self.tick_stats: list = []  # per query tick: batch size, wall, cost span
 
     # ------------------------------------------------------------- API ----
     def submit(self, query) -> int:
         rid = self._next_id
         self._next_id += 1
-        self.queue.append(_Request(rid, query, time.perf_counter()))
+        # cost computed ONCE at submission (plan_cost itself caches per
+        # canonical signature, but re-deriving the signature for the whole
+        # backlog every tick would be O(backlog × ticks) wasted hashing)
+        cost = self.engine.plan_cost(query) if self.cfg.schedule == "cost" else None
+        self.queue.append(_Request(rid, query, time.perf_counter(), cost=cost))
         return rid
 
     def submit_update(self, update) -> None:
@@ -89,18 +112,41 @@ class MatchServer:
             self.n_updates_applied += len(batch_u)
         if not self.queue:
             return 0
+        if self.cfg.schedule == "cost" and len(self.queue) > 1:
+            # cost-ranked tick: best-plan-cost queries first (ties keep
+            # submission order); costs were cached at submit()
+            oldest = min(self.queue, key=lambda r: r.request_id)
+            self.queue.sort(key=lambda r: (r.cost, r.request_id))
+            head = self.queue[: self.cfg.max_batch]
+            if oldest not in head:
+                # anti-starvation: every tick carries the oldest queued
+                # request, so a steady stream of cheap arrivals can delay
+                # an expensive query by at most one tick's batch, never
+                # indefinitely
+                self.queue.remove(oldest)
+                self.queue.insert(self.cfg.max_batch - 1, oldest)
         batch, self.queue = self.queue[: self.cfg.max_batch], self.queue[self.cfg.max_batch:]
         t_tick = time.perf_counter()
         results = self.engine.match_many(
             [r.query for r in batch],
             index_kind=self.cfg.index_kind,
             probe_impl=self.cfg.probe_impl,
+            join_impl=self.cfg.join_impl,
         )
         now = time.perf_counter()
         for r, matches in zip(batch, results):
             self.finished[r.request_id] = matches
             self.latency_s[r.request_id] = now - r.t_submit
             self.service_s[r.request_id] = now - t_tick
+        batch_costs = [r.cost for r in batch if r.cost is not None]
+        self.tick_stats.append(
+            {
+                "n_queries": len(batch),
+                "wall_s": now - t_tick,
+                "min_cost": min(batch_costs) if batch_costs else None,
+                "max_cost": max(batch_costs) if batch_costs else None,
+            }
+        )
         return len(batch)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> dict:
