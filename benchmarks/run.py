@@ -25,6 +25,7 @@ def main() -> None:
         bench_params,
         bench_pruning,
         bench_query_scaling,
+        bench_serving,
         bench_stacked,
         bench_updates,
         bench_vs_baselines,
@@ -35,6 +36,7 @@ def main() -> None:
         ("grouped", bench_grouped.run),
         ("stacked", bench_stacked.run),
         ("updates", bench_updates.run),
+        ("serving", bench_serving.run),
         ("join", bench_join.run),
         ("fig8_pruning", bench_pruning.run),
         ("fig9_baselines", bench_vs_baselines.run),

@@ -16,17 +16,116 @@ orders each tick's batch by the engine's cached plan cost so cheap
 queries aren't stuck behind expensive ones — per-tick p50/p95 are
 reported either way.
 
+``--service`` swaps the bare tick loop for the async multi-tenant tier
+(serve/service.py): admission control, deadline-aware scheduling,
+bounded queues, retries with backoff, and background compaction —
+reporting p50/p95/p99 plus the shed/expired/retry counters.
+``--fault-rate P`` wraps the engine in the fault injector
+(serve/faults.py) so each tick raises a transient fault with
+probability P — the chaos smoke: every request must still complete with
+exact matches, via retries.
+
     PYTHONPATH=src python examples/serve_queries.py [--n 4000] [--requests 60]
     PYTHONPATH=src python examples/serve_queries.py --update-every 5 --cache
+    PYTHONPATH=src python examples/serve_queries.py --service --fault-rate 0.2
 """
 import argparse
+import asyncio
 import time
 
 import numpy as np
 
 from repro.core import GnnPeConfig, GnnPeEngine, GraphUpdate, vf2_match
 from repro.graphs import newman_watts_strogatz, random_connected_query
+from repro.serve.faults import FaultSpec, FlakyEngine
 from repro.serve.match_server import MatchServeConfig, MatchServer
+from repro.serve.service import MatchService, ServiceConfig
+
+
+async def _run_service(engine, args, rng):
+    """The async tier: admission → priority queue → tick executor."""
+    flaky = None
+    if args.fault_rate > 0:
+        flaky = FlakyEngine(engine, FaultSpec(p_transient=args.fault_rate, seed=0))
+    svc = MatchService(
+        flaky or engine,
+        ServiceConfig(
+            max_batch=args.batch,
+            index_kind=None,
+            schedule="deadline",
+            default_deadline_s=args.deadline,
+            max_retries=8,
+            backoff_base_s=0.01,
+            backoff_max_s=0.1,
+            idle_tick_s=0.02,
+            cache_fastpath=args.cache,
+        ),
+    )
+    await svc.start()
+    sent = []
+    t_serve = time.perf_counter()
+    for r in range(args.requests):
+        size = int(rng.choice([5, 6, 8]))
+        try:
+            q = random_connected_query(engine.graph, size, seed=1000 + r)
+        except RuntimeError:
+            continue
+        _, fut = svc.submit(q, tenant=f"tenant-{r % 3}")
+        sent.append((r, q, fut))
+        if args.update_every and (r + 1) % args.update_every == 0:
+            cur = engine.graph
+            e = cur.edge_array()
+            svc.submit_update(GraphUpdate(
+                add_edges=rng.integers(0, cur.n_vertices, size=(2, 2)),
+                remove_edges=e[rng.choice(e.shape[0], size=2, replace=False)],
+            ))
+        await asyncio.sleep(0)  # arrival yields: ticks interleave with submits
+    resps = await asyncio.gather(*(f for _, _, f in sent))
+    wall = time.perf_counter() - t_serve
+    await svc.stop()
+
+    ok = [resp for resp in resps if resp.ok]
+    assert len(resps) == len(sent), "a request was lost without a terminal response"
+    verified = 0
+    if not args.update_every:  # static graph: ok answers must equal VF2's
+        for (r, q, _), resp in zip(sent, resps):
+            if resp.ok and r % args.verify_every == 0:
+                assert set(resp.matches) == set(vf2_match(engine.graph, q)), \
+                    f"request {r}: mismatch!"
+                verified += 1
+    lat_ms = np.sort(np.asarray([resp.latency_s for resp in ok])) * 1e3
+    c = svc.counters
+    print(
+        f"[service] {len(ok)}/{len(resps)} ok in {wall:.1f}s → {len(ok)/wall:.1f} qps | "
+        f"p50={lat_ms[len(lat_ms)//2]:.1f}ms "
+        f"p95={lat_ms[min(int(len(lat_ms)*0.95), len(lat_ms)-1)]:.1f}ms "
+        f"p99={lat_ms[min(int(len(lat_ms)*0.99), len(lat_ms)-1)]:.1f}ms | "
+        f"exactness verified on {verified} samples"
+    )
+    print(
+        f"[service] shed={c['shed']} expired={c['expired']} rejected={c['rejected']} "
+        f"error={c['error']} retry-exhausted={c['retry-exhausted']} | "
+        f"retries={c['retries']} timeouts={c['attempt_timeouts']} "
+        f"cache_fastpath={c['cache_fastpath']} | "
+        f"compactions installed={c['compactions_installed']} "
+        f"discarded={c['compactions_discarded']}"
+    )
+    if flaky is not None:
+        assert c["error"] == 0 and c["retry-exhausted"] == 0, \
+            "transient faults must be absorbed by retries, not surfaced"
+        print(
+            f"[service] chaos: {flaky.n_transient} transient faults over "
+            f"{flaky.n_calls} engine calls — all requests still exact"
+        )
+    ticks = svc.tick_stats()
+    if ticks:
+        tms = np.sort(np.asarray([t["wall_s"] for t in ticks])) * 1e3
+        n_err = sum(t["n_errors"] for t in ticks)
+        print(
+            f"[service] {len(ticks)} query ticks: tick p50={tms[len(tms)//2]:.1f}ms "
+            f"p95={tms[min(int(len(tms)*0.95), len(tms)-1)]:.1f}ms | "
+            f"{n_err} per-tick error entries"
+        )
 
 
 def main():
@@ -64,6 +163,20 @@ def main():
         "--cache", action="store_true",
         help="enable the signature-keyed result cache (serve/cache.py)",
     )
+    ap.add_argument(
+        "--service", action="store_true",
+        help="serve through the async multi-tenant tier (serve/service.py) "
+        "instead of the bare tick loop: admission, deadlines, retries",
+    )
+    ap.add_argument(
+        "--fault-rate", type=float, default=0.0,
+        help="with --service: inject a transient engine fault per tick with "
+        "this probability (chaos smoke; requests must survive via retries)",
+    )
+    ap.add_argument(
+        "--deadline", type=float, default=30.0,
+        help="with --service: per-request deadline in seconds",
+    )
     args = ap.parse_args()
 
     g = newman_watts_strogatz(args.n, k=4, p=0.1, n_labels=50, seed=0)
@@ -94,9 +207,13 @@ def main():
           f"({engine.offline_stats['n_paths']} paths{grp}, "
           f"{engine.offline_stats['index_bytes']/1e6:.1f} MB index)")
 
+    rng = np.random.default_rng(0)
+    if args.service:
+        asyncio.run(_run_service(engine, args, rng))
+        return
+
     # request stream: mixed query sizes, fused into batches by MatchServer;
     # with --update-every, update ticks interleave with the query ticks
-    rng = np.random.default_rng(0)
     server = MatchServer(
         engine, MatchServeConfig(max_batch=args.batch, schedule=args.schedule)
     )

@@ -69,6 +69,8 @@ __all__ = [
     "apply_graph_update",
     "PartitionDelta",
     "DeltaIndex",
+    "CompactionSnapshot",
+    "build_compacted_index",
     "probe_delta_multi",
     "l_hop_reach",
     "paths_touching",
@@ -223,6 +225,9 @@ class PartitionDelta:
     # dead-row count maintained incrementally: the probe consults it per
     # memo entry, so it must not re-scan the (P,) mask every time
     n_tomb: int = 0
+    # bumped on every mutation (tombstone/append/drop) — a background
+    # compaction snapshot records it and installs only if it still holds
+    version: int = 0
 
     @property
     def n_rows(self) -> int:
@@ -294,6 +299,7 @@ class DeltaIndex:
         new_tomb = int((dead & ~dp.tombstone).sum())
         dp.tombstone |= dead
         dp.n_tomb += new_tomb
+        dp.version += 1
         dropped = 0
         if dp.n_rows:
             keep = ~paths_touching(dp.paths, touched)
@@ -327,6 +333,7 @@ class DeltaIndex:
         if paths.shape[0] == 0:
             return
         dp = self.parts[mi]
+        dp.version += 1
         dp.paths = np.concatenate([dp.paths, paths.astype(np.int32)])
         dp.emb = np.concatenate([dp.emb, emb.astype(np.float32)])
         dp.emb0 = np.concatenate([dp.emb0, emb0.astype(np.float32)])
@@ -354,31 +361,57 @@ class DeltaIndex:
     def needs_compaction(self, mi: int, index: PackedIndex, frac: float, min_rows: int) -> bool:
         return self.parts[mi].pressure > max(min_rows, int(frac * max(index.n_paths, 1)))
 
+    def compaction_urgency(self, mi: int, index: PackedIndex, frac: float, min_rows: int) -> float:
+        """Delta pressure relative to the compaction threshold (>1 means
+        over threshold) — the background compactor drains the
+        most-pressured partition first, so a burst that overflows several
+        partitions pays its worst probe-side brute-scan cost down first."""
+        return self.parts[mi].pressure / max(min_rows, int(frac * max(index.n_paths, 1)))
+
+    # -- compaction, split for off-thread execution ---------------------
+    # snapshot (cheap, on the engine thread) → build (the expensive
+    # re-sort/re-pack, safe on ANY thread: it only reads the snapshot's
+    # arrays, which mutation rebinds rather than writes) → try_install
+    # (cheap, engine thread; refuses if the delta state moved on).
+    def snapshot_partition(
+        self, mi: int, index: PackedIndex, path_labels: np.ndarray | None
+    ) -> "CompactionSnapshot":
+        dp = self.parts[mi]
+        return CompactionSnapshot(
+            mi=mi,
+            part=dp,
+            version=dp.version,
+            index=index,
+            live=~dp.tombstone,  # fresh array: immune to later |= in place
+            paths=dp.paths,
+            emb=dp.emb,
+            emb0=dp.emb0,
+            emb_multi=dp.emb_multi,
+            path_labels=path_labels,
+        )
+
+    def try_install(self, mi: int, snap: "CompactionSnapshot", new_index: PackedIndex) -> bool:
+        """Swap in an off-thread-built compacted index — but only if the
+        partition's delta state is exactly what the snapshot saw (no
+        update tombstoned or appended in the meantime).  Returns whether
+        the install happened; a refusal just means the caller re-snapshots
+        on a later tick."""
+        dp = self.parts[mi]
+        if dp is not snap.part or dp.version != snap.version:
+            return False
+        self.parts[mi] = _empty_delta(new_index)
+        self.n_compactions += 1
+        return True
+
     def compact_partition(self, mi: int, index: PackedIndex, path_labels: np.ndarray | None) -> PackedIndex:
         """Re-sort/re-pack ONE partition: live main rows + buffer rows go
         through the ordinary ``build_index`` (and ``attach_groups`` when
         the source index carried the GNN-PGE sidecar); the delta state
         resets.  Other partitions are untouched."""
-        dp = self.parts[mi]
-        live = ~dp.tombstone
-        paths = np.concatenate([index.paths[live], dp.paths])
-        emb = np.concatenate([index.emb[live], dp.emb])
-        emb0 = np.concatenate([index.emb0[live], dp.emb0])
-        emb_multi = np.concatenate([index.emb_multi[:, live], dp.emb_multi], axis=1)
-        new_index = build_index(
-            paths,
-            emb,
-            emb0,
-            emb_multi,
-            block_size=index.block_size,
-            fanout=index.fanout,
-            quantize=index.emb_q is not None,
-            path_labels=path_labels[paths] if path_labels is not None and index.emb_q is not None else None,
-        )
-        if index.groups is not None:
-            attach_groups(new_index, index.groups.group_size)
-        self.parts[mi] = _empty_delta(new_index)
-        self.n_compactions += 1
+        snap = self.snapshot_partition(mi, index, path_labels)
+        new_index = build_compacted_index(snap)
+        installed = self.try_install(mi, snap, new_index)
+        assert installed  # synchronous: nothing can move the version
         return new_index
 
     def reset_part(self, mi: int, index: PackedIndex) -> None:
@@ -399,6 +432,58 @@ class DeltaIndex:
             "delta_bytes": int(sum(dp.nbytes() for dp in self.parts)),
             "n_compactions": self.n_compactions,
         }
+
+
+# --------------------------------------------------------------------------
+# Background compaction primitives
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionSnapshot:
+    """Frozen view of one partition's (index, delta) pair for an
+    off-thread re-pack.  ``part``/``version`` pin the delta state the
+    snapshot saw; ``try_install`` rejects the build if either moved."""
+
+    mi: int
+    part: PartitionDelta
+    version: int
+    index: PackedIndex
+    live: np.ndarray  # (P,) bool — ~tombstone at snapshot time
+    paths: np.ndarray
+    emb: np.ndarray
+    emb0: np.ndarray
+    emb_multi: np.ndarray
+    path_labels: np.ndarray | None  # graph labels at snapshot time
+
+
+def build_compacted_index(snap: CompactionSnapshot) -> PackedIndex:
+    """The expensive half of compaction — live main rows + buffer rows
+    through the ordinary ``build_index`` (and ``attach_groups`` when the
+    source carried the GNN-PGE sidecar).  Pure: reads only the snapshot,
+    mutates nothing, so it is safe on a background thread while the
+    serving loop keeps probing the old index."""
+    index = snap.index
+    live = snap.live
+    paths = np.concatenate([index.paths[live], snap.paths])
+    emb = np.concatenate([index.emb[live], snap.emb])
+    emb0 = np.concatenate([index.emb0[live], snap.emb0])
+    emb_multi = np.concatenate([index.emb_multi[:, live], snap.emb_multi], axis=1)
+    new_index = build_index(
+        paths,
+        emb,
+        emb0,
+        emb_multi,
+        block_size=index.block_size,
+        fanout=index.fanout,
+        quantize=index.emb_q is not None,
+        path_labels=snap.path_labels[paths]
+        if snap.path_labels is not None and index.emb_q is not None
+        else None,
+    )
+    if index.groups is not None:
+        attach_groups(new_index, index.groups.group_size)
+    return new_index
 
 
 # --------------------------------------------------------------------------

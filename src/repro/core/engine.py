@@ -188,6 +188,10 @@ class GnnPeEngine:
         self.delta: DeltaIndex | None = None
         self.epoch: int = 0
         self._emb_fingerprint: bytes = b""
+        # partitions whose compaction was deferred off the update path
+        # (apply_updates(compaction="defer")) — drained by the serving
+        # tier's background compactor via prepare/build/install_compaction
+        self._pending_compaction: set[int] = set()
         self._result_cache = None
         if cfg.cache:
             from ..serve.cache import ResultCache  # lazy: avoids core↔serve cycle
@@ -345,6 +349,7 @@ class GnnPeEngine:
         }
         self._stacked_probe = None  # indexes changed; restack lazily
         self.delta = DeltaIndex([m.index for m in self.models]) if self.models else None
+        self._pending_compaction.clear()
         self.epoch = 0
         self._emb_fingerprint = self._content_fingerprint()
         # dr plans probed the PREVIOUS build's indexes; the fingerprint alone
@@ -539,7 +544,7 @@ class GnnPeEngine:
         self.partitioning = Partitioning(assignment, self.partitioning.n_parts)
         return new_members
 
-    def apply_updates(self, updates, strategy: str = "delta") -> dict:
+    def apply_updates(self, updates, strategy: str = "delta", compaction: str = "inline") -> dict:
         """Absorb a batch of online graph edits (one index epoch).
 
         ``updates`` is one ``GraphUpdate`` or a list applied atomically.
@@ -553,12 +558,24 @@ class GnnPeEngine:
         the offline baseline benchmarks/bench_updates.py measures against.
         Matches after either strategy are identical at every epoch.
 
+        ``compaction="defer"`` skips the inline re-pack: over-threshold
+        partitions are queued on ``pending_compactions()`` for a
+        background compactor (prepare → build off-thread → install) so a
+        ``compact_partition`` stall never extends an update tick — probes
+        stay exact either way (``main ∪ delta − tombstones`` holds at any
+        pressure, compaction is purely a probe-cost optimization).  Note
+        match ORDER follows index layout: a deferred partition emits the
+        same match set as an inline-compacted one, byte-identical order
+        only once the install lands.
+
         Returns a summary dict (epoch, mutated/compacted partitions,
         delta/tombstone row counts).
         """
         assert self.graph is not None, "call build() first"
         if strategy not in ("delta", "rebuild"):
             raise ValueError(f"unknown update strategy {strategy!r}; use 'delta' or 'rebuild'")
+        if compaction not in ("inline", "defer"):
+            raise ValueError(f"unknown compaction mode {compaction!r}; use 'inline' or 'defer'")
         if not self.models:
             raise RuntimeError("apply_updates needs at least one built partition model")
         cfg = self.cfg
@@ -655,10 +672,14 @@ class GnnPeEngine:
                     else np.zeros(0, np.int64),
                 }
             if delta.needs_compaction(mi, model.index, cfg.delta_compact_frac, cfg.delta_compact_min):
-                model.index = delta.compact_partition(
-                    mi, model.index, g.labels if cfg.quantize_index else None
-                )
-                compacted.append(mi)
+                if compaction == "defer":
+                    self._pending_compaction.add(mi)
+                else:
+                    model.index = delta.compact_partition(
+                        mi, model.index, g.labels if cfg.quantize_index else None
+                    )
+                    self._pending_compaction.discard(mi)
+                    compacted.append(mi)
         # elastic re-stacking: only the compacted partitions' shard slots
         if self._stacked_probe is not None and compacted:
             for mi in compacted:
@@ -684,6 +705,7 @@ class GnnPeEngine:
             "touched": int(touched.size),
             "mutated": sorted(mutated),
             "compacted": compacted,
+            "compaction_deferred": sorted(self._pending_compaction),
             "delta_rows_added": n_delta_rows,
             "rows_tombstoned": n_tombstoned,
             **delta.stats(),
@@ -741,6 +763,7 @@ class GnnPeEngine:
             model.index = index
             if self.delta is not None:
                 self.delta.reset_part(mi, index)
+        self._pending_compaction.clear()
         self.offline_stats["n_paths"] = int(sum(m.index.n_paths for m in self.models))
         self.offline_stats["index_bytes"] = int(sum(m.index.nbytes() for m in self.models))
         self._stacked_probe = None
@@ -762,6 +785,114 @@ class GnnPeEngine:
         if self.delta is None:
             return rows
         return self.delta.live_rows(mi, rows)
+
+    # ------------------------------------------------------------------
+    # Background compaction (§serving tier): snapshot → build → install
+    # ------------------------------------------------------------------
+    def pending_compactions(self) -> list:
+        """Partitions queued for deferred compaction, most-pressured
+        first (``DeltaIndex.compaction_urgency``)."""
+        if self.delta is None or not self._pending_compaction:
+            return []
+        cfg = self.cfg
+        return sorted(
+            self._pending_compaction,
+            key=lambda mi: -self.delta.compaction_urgency(
+                mi, self.models[mi].index, cfg.delta_compact_frac, cfg.delta_compact_min
+            ),
+        )
+
+    def prepare_compaction(self, mi: int):
+        """Cheap snapshot of one pending partition's (index, delta) state
+        — call on the thread that owns the engine."""
+        assert self.delta is not None
+        return self.delta.snapshot_partition(
+            mi, self.models[mi].index, self.graph.labels if self.cfg.quantize_index else None
+        )
+
+    @staticmethod
+    def build_compaction(snap):
+        """The expensive re-sort/re-pack.  Pure — safe on a background
+        thread while the engine keeps serving probes."""
+        from .delta import build_compacted_index
+
+        return build_compacted_index(snap)
+
+    def install_compaction(self, snap, new_index) -> bool:
+        """Swap an off-thread-built compacted index in (engine thread).
+        Returns False — and leaves everything untouched — if an update
+        mutated the partition after the snapshot; the partition stays on
+        ``pending_compactions()`` for a later retry."""
+        if not (self.delta and self.delta.try_install(snap.mi, snap, new_index)):
+            return False
+        self.models[snap.mi].index = new_index
+        self._pending_compaction.discard(snap.mi)
+        # the per-epoch liveness mask cached for the device join is keyed
+        # on the epoch, which an install does NOT bump — drop it so the
+        # next probe rebuilds it against the tombstone-free partition
+        self._live_mask_cache = None
+        if self._stacked_probe is not None:
+            if self._stacked_probe.update_slot(snap.mi, new_index):
+                self.offline_stats.update(self._stacked_probe.stacked.padding_stats())
+            else:
+                self._stacked_probe = None  # outgrew the slot; restack lazily
+        return True
+
+    # ------------------------------------------------------------------
+    # Per-request error scoping (§serving tier)
+    # ------------------------------------------------------------------
+    def match_many_isolated(
+        self,
+        queries: list,
+        index_kind: str | None = None,
+        probe_impl: str | None = None,
+        join_impl: str | None = None,
+    ) -> list:
+        """``match_many`` with per-request fault quarantine.
+
+        Returns ``[(ok, value), ...]`` aligned with ``queries``: ``(True,
+        matches)`` on success, ``(False, exception)`` for requests whose
+        presence makes the batch raise.  A raising batch re-executes by
+        bisection, so one malformed/poisoned query costs O(log batch)
+        extra ``match_many`` calls while every other request still
+        returns exactly what a fault-free batch would have produced
+        (per-query results are batch-independent by construction — see
+        ``match_many``'s equivalence contract with ``impl="scalar"``).
+
+        Exceptions marked ``transient = True`` (serve/errors.py's
+        ``TransientError``) are NOT bisected: the fault is about the
+        attempt, not any particular query, so re-executing halves would
+        just be an unbudgeted immediate retry — the whole batch fails as
+        ``(False, exc)`` and the caller's retry/backoff policy decides.
+        """
+        kw = dict(index_kind=index_kind, probe_impl=probe_impl, join_impl=join_impl)
+        if not queries:
+            return []
+        try:
+            return [(True, r) for r in self.match_many(queries, **kw)]
+        except Exception as exc:
+            if len(queries) == 1 or getattr(exc, "transient", False):
+                return [(False, exc)] * len(queries)
+            mid = len(queries) // 2
+            return self.match_many_isolated(queries[:mid], **kw) + self.match_many_isolated(
+                queries[mid:], **kw
+            )
+
+    def cache_peek(self, q: Graph):
+        """Result-cache lookup WITHOUT running the pipeline: the query's
+        matches if its signature is cached (remapped to its own vertex
+        order), else None.  The serving tier's overload fast path — a
+        full queue can still answer repeat queries at cache cost."""
+        if self._result_cache is None:
+            return None
+        from ..serve.cache import remap_matches
+
+        perm, key = canonical_form(q)
+        ent = self._result_cache.get(key, record=False)
+        if ent is None:
+            return None
+        self._result_cache.stats.hits += 1
+        return remap_matches(ent.matches, perm)
 
     # ------------------------------------------------------------------
     # Online matching (Alg. 1 lines 6-11, Alg. 3)

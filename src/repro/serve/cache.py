@@ -96,15 +96,20 @@ class ResultCache:
         return len(self._entries)
 
     # ------------------------------------------------------------------
-    def get(self, key: bytes) -> _Entry | None:
+    def get(self, key: bytes, record: bool = True) -> _Entry | None:
+        """``record=False`` is a peek: hit/miss counters are left to the
+        caller (the serving fast path counts its own hits and would
+        otherwise double-count the pipeline's miss)."""
         ent = self._entries.get(key)
         if ent is None:
-            self.stats.misses += 1
+            if record:
+                self.stats.misses += 1
             return None
         # LRU touch: re-append at the back of the insertion order
         del self._entries[key]
         self._entries[key] = ent
-        self.stats.hits += 1
+        if record:
+            self.stats.hits += 1
         return ent
 
     def put(

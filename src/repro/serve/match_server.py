@@ -23,13 +23,24 @@ on, the engine's result cache rides along: repeat queries in the stream
 are served from cache and updates evict only the entries whose
 partitions mutated.
 
+Robustness: both queues are optionally bounded (``max_queue`` /
+``max_update_queue``) — at capacity ``submit``/``submit_update`` raise
+``QueueFull`` instead of growing without limit — and ``wait_for_work``
+lets a driving loop sleep until a submission lands instead of spinning
+on empty ticks.  The asyncio tier (serve/service.py) keeps this class
+as its inner batch executor via ``execute_batch``/``apply_update_tick``
+(it owns admission, deadlines and retries itself).
+
 CPU-scale tests drive a tiny engine; the same server loop fronts a
 paper-scale index unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+
+from .errors import QueueFull
 
 __all__ = ["MatchServeConfig", "MatchServer"]
 
@@ -55,6 +66,14 @@ class MatchServeConfig:
     schedule: str = "fifo"
     # graph updates coalesced into one apply_updates epoch per tick
     max_updates_per_tick: int = 4
+    # backpressure: queued requests/updates beyond these caps raise
+    # QueueFull at submit time (0 = unbounded, the historical behavior)
+    max_queue: int = 0
+    max_update_queue: int = 0
+    # compaction mode forwarded to apply_updates: "inline" compacts
+    # over-threshold partitions inside the update tick; "defer" leaves
+    # them on engine.pending_compactions() for a background compactor
+    compaction: str = "inline"
 
 
 @dataclasses.dataclass
@@ -69,6 +88,10 @@ class MatchServer:
     def __init__(self, engine, cfg: MatchServeConfig = MatchServeConfig()):
         if cfg.schedule not in ("fifo", "cost"):
             raise ValueError(f"unknown schedule {cfg.schedule!r}; use 'fifo' or 'cost'")
+        if cfg.compaction not in ("inline", "defer"):
+            raise ValueError(
+                f"unknown compaction mode {cfg.compaction!r}; use 'inline' or 'defer'"
+            )
         self.engine = engine
         self.cfg = cfg
         self.queue: list[_Request] = []
@@ -81,9 +104,16 @@ class MatchServer:
         self.n_updates_applied = 0
         self.update_summaries: list = []  # apply_updates summaries, in order
         self.tick_stats: list = []  # per query tick: batch size, wall, cost span
+        # wake-on-submit: a driving loop parks on wait_for_work() instead
+        # of spinning step() against two empty queues
+        self._wake = threading.Event()
 
     # ------------------------------------------------------------- API ----
     def submit(self, query) -> int:
+        if self.cfg.max_queue and len(self.queue) >= self.cfg.max_queue:
+            raise QueueFull(
+                f"query queue at capacity ({self.cfg.max_queue}); resubmit later"
+            )
         rid = self._next_id
         self._next_id += 1
         # cost computed ONCE at submission (plan_cost itself caches per
@@ -91,25 +121,87 @@ class MatchServer:
         # backlog every tick would be O(backlog × ticks) wasted hashing)
         cost = self.engine.plan_cost(query) if self.cfg.schedule == "cost" else None
         self.queue.append(_Request(rid, query, time.perf_counter(), cost=cost))
+        self._wake.set()
         return rid
 
     def submit_update(self, update) -> None:
         """Queue one ``GraphUpdate``; applied at the start of a later tick
         (before that tick's queries), preserving submission order."""
+        if self.cfg.max_update_queue and len(self.update_queue) >= self.cfg.max_update_queue:
+            raise QueueFull(
+                f"update queue at capacity ({self.cfg.max_update_queue}); resubmit later"
+            )
         self.update_queue.append(update)
+        self._wake.set()
 
+    def wait_for_work(self, timeout: float | None = None) -> bool:
+        """Block until something is queued (or ``timeout`` elapses).
+        Returns whether work is available — the idle-backoff primitive
+        for callers that would otherwise busy-wait on empty ``step()``s."""
+        if self.queue or self.update_queue:
+            return True
+        self._wake.clear()
+        # re-check: a submit may have raced the clear (submit sets AFTER
+        # appending, so either we see the item or the event)
+        if self.queue or self.update_queue:
+            return True
+        return self._wake.wait(timeout)
+
+    # ----------------------------------------------------- tick pieces ----
+    def apply_update_tick(self) -> int:
+        """Coalesce up to ``max_updates_per_tick`` queued updates into ONE
+        ``apply_updates`` index epoch.  Returns how many were applied."""
+        if not self.update_queue:
+            return 0
+        n_upd = self.cfg.max_updates_per_tick
+        batch_u, self.update_queue = self.update_queue[:n_upd], self.update_queue[n_upd:]
+        t_u = time.perf_counter()
+        self.update_summaries.append(
+            self.engine.apply_updates(batch_u, compaction=self.cfg.compaction)
+        )
+        self.update_s.append(time.perf_counter() - t_u)
+        self.n_updates_applied += len(batch_u)
+        return len(batch_u)
+
+    def execute_batch(self, queries: list, isolate: bool = False):
+        """One fused tick over ``queries`` with this server's overrides,
+        recording a ``tick_stats`` entry.  Returns ``(results, wall_s)``.
+
+        ``isolate=True`` routes through ``match_many_isolated``:
+        ``results`` become ``(ok, value)`` pairs and one raising query
+        costs an error entry instead of the whole tick — the asyncio
+        tier's execution primitive."""
+        kw = dict(
+            index_kind=self.cfg.index_kind,
+            probe_impl=self.cfg.probe_impl,
+            join_impl=self.cfg.join_impl,
+        )
+        t_tick = time.perf_counter()
+        if isolate:
+            results = self.engine.match_many_isolated(queries, **kw)
+            n_errors = sum(1 for ok, _ in results if not ok)
+        else:
+            results = self.engine.match_many(queries, **kw)
+            n_errors = 0
+        wall = time.perf_counter() - t_tick
+        self.tick_stats.append(
+            {
+                "n_queries": len(queries),
+                "wall_s": wall,
+                "n_errors": n_errors,
+                "min_cost": None,
+                "max_cost": None,
+            }
+        )
+        return results, wall
+
+    # ------------------------------------------------------------- loop ---
     def step(self) -> int:
         """Serve one tick: apply up to ``max_updates_per_tick`` queued
         graph updates as one index epoch, then fuse up to ``max_batch``
         queued queries through one match_many.  Returns the number of
         queries served."""
-        if self.update_queue:
-            n_upd = self.cfg.max_updates_per_tick
-            batch_u, self.update_queue = self.update_queue[:n_upd], self.update_queue[n_upd:]
-            t_u = time.perf_counter()
-            self.update_summaries.append(self.engine.apply_updates(batch_u))
-            self.update_s.append(time.perf_counter() - t_u)
-            self.n_updates_applied += len(batch_u)
+        self.apply_update_tick()
         if not self.queue:
             return 0
         if self.cfg.schedule == "cost" and len(self.queue) > 1:
@@ -126,27 +218,17 @@ class MatchServer:
                 self.queue.remove(oldest)
                 self.queue.insert(self.cfg.max_batch - 1, oldest)
         batch, self.queue = self.queue[: self.cfg.max_batch], self.queue[self.cfg.max_batch:]
-        t_tick = time.perf_counter()
-        results = self.engine.match_many(
-            [r.query for r in batch],
-            index_kind=self.cfg.index_kind,
-            probe_impl=self.cfg.probe_impl,
-            join_impl=self.cfg.join_impl,
-        )
+        results, _ = self.execute_batch([r.query for r in batch])
         now = time.perf_counter()
+        t_tick = now - self.tick_stats[-1]["wall_s"]
         for r, matches in zip(batch, results):
             self.finished[r.request_id] = matches
             self.latency_s[r.request_id] = now - r.t_submit
             self.service_s[r.request_id] = now - t_tick
         batch_costs = [r.cost for r in batch if r.cost is not None]
-        self.tick_stats.append(
-            {
-                "n_queries": len(batch),
-                "wall_s": now - t_tick,
-                "min_cost": min(batch_costs) if batch_costs else None,
-                "max_cost": max(batch_costs) if batch_costs else None,
-            }
-        )
+        if batch_costs:
+            self.tick_stats[-1]["min_cost"] = min(batch_costs)
+            self.tick_stats[-1]["max_cost"] = max(batch_costs)
         return len(batch)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> dict:

@@ -1,0 +1,471 @@
+"""Async multi-tenant serving tier over the batched ``MatchServer``.
+
+The tick loop in serve/match_server.py is best-effort: a malformed
+query, a slow tenant, or an update burst stalls or crashes every other
+caller, and nothing bounds queue growth.  This module is the service
+front that makes overload and faults survivable:
+
+```
+submit(query, tenant, priority, deadline)
+      │  cache fast path: a signature-cached repeat answers immediately
+      │  (even — especially — when the queue is full)
+      ▼  admission (serve/admission.py): token-bucket quota + bounded
+         per-tenant backlog → REJECTED, else global queue cap → SHED
+         (policy "drop-lowest-priority" evicts a worse queued request
+         instead when the newcomer outranks it)
+priority queue  (min-heap on (priority, rank, seq); schedule="deadline"
+      │  extends the tick loop's cost ordering: rank = plan_cost ×
+      │  remaining deadline slack — cheapest-and-most-urgent first)
+      ▼  expired requests shed at pop, before they burn tick time
+serve loop (one asyncio task)
+      │  update tick first: coalesced apply_updates epoch with
+      │  compaction DEFERRED — the re-pack runs on a background thread
+      │  (snapshot → build → install, core/delta.py) so a
+      │  compact_partition stall never blocks query ticks
+      ▼  query tick: MatchServer.execute_batch(isolate=True) on the
+         single engine thread, watched by attempt_timeout_s
+per-request outcomes
+      │  ok ───────────────→ matches (byte-identical to a fault-free run)
+      │  TransientError ───→ retry with exponential backoff, bounded
+      │  other exception ──→ quarantined via bisecting re-execution
+      ▼  timeout ──────────→ retried like a transient, then exhausted
+Response(status ∈ ok|rejected|shed|expired|error|retry-exhausted)
+```
+
+Every submission gets an ``asyncio.Future[Response]`` — nothing blocks,
+nothing is silently dropped, and every non-ok outcome carries a
+structured ``reason``.
+
+Threading model: ONE engine executor thread owns every engine mutation
+(update epochs, query ticks, compaction snapshot/install), so the
+engine needs no locks; only the pure ``build_compaction`` re-pack runs
+on a second thread.  A hung tick therefore delays — never corrupts —
+subsequent ticks: the loop stops *waiting* at ``attempt_timeout_s``,
+marks the batch for retry, and the engine thread drains naturally.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+from .admission import DEFAULT_TENANT, AdmissionConfig, AdmissionController
+from .errors import TransientError
+from .match_server import MatchServeConfig, MatchServer
+
+__all__ = ["ServiceConfig", "Response", "MatchService"]
+
+# terminal request statuses
+OK = "ok"
+REJECTED = "rejected"  # admission: tenant quota/backlog
+SHED = "shed"  # overload: global queue full (or evicted by policy)
+EXPIRED = "expired"  # deadline passed before the request could run
+ERROR = "error"  # quarantined: the request itself raises
+RETRY_EXHAUSTED = "retry-exhausted"  # transient faults/timeouts beyond budget
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    max_batch: int = 16  # queries fused per tick (inner MatchServer)
+    max_queue: int = 256  # global queued-request cap (admission SHEDs past it)
+    # engine-layer overrides forwarded to the inner MatchServer
+    index_kind: str | None = None
+    probe_impl: str | None = None
+    join_impl: str | None = None
+    # scheduling: "deadline" ranks by plan_cost × remaining slack
+    # (cheapest-and-most-urgent first); "cost" by plan_cost alone;
+    # "fifo" by submission order
+    schedule: str = "deadline"
+    default_deadline_s: float | None = None  # applied when submit passes none
+    deadline_horizon_s: float = 30.0  # slack stand-in for deadline-less requests
+    # faults: per-attempt watchdog + bounded retry with exponential backoff
+    attempt_timeout_s: float = 30.0
+    max_retries: int = 2  # extra attempts after the first
+    backoff_base_s: float = 0.02
+    backoff_factor: float = 2.0
+    backoff_max_s: float = 1.0
+    # graceful degradation under overload
+    shed_policy: str = "reject-new"  # or "drop-lowest-priority"
+    cache_fastpath: bool = True  # serve signature-cache hits even when full
+    # live updates: coalescing + compaction off the serving path
+    max_updates_per_tick: int = 4
+    max_update_queue: int = 0  # 0 = unbounded (updates are operator traffic)
+    background_compaction: bool = True
+    idle_tick_s: float = 0.5  # loop heartbeat when idle (retries pending installs)
+
+
+@dataclasses.dataclass
+class Response:
+    request_id: int
+    tenant: str
+    status: str
+    matches: list | None = None
+    reason: str = ""
+    attempts: int = 0
+    from_cache: bool = False
+    latency_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.status == OK
+
+
+class _Pending:
+    __slots__ = (
+        "rid", "tenant", "query", "priority", "deadline", "cost",
+        "attempts", "t_submit", "future", "done",
+    )
+
+    def __init__(self, rid, tenant, query, priority, deadline, cost, t_submit, future):
+        self.rid = rid
+        self.tenant = tenant
+        self.query = query
+        self.priority = priority
+        self.deadline = deadline
+        self.cost = cost
+        self.attempts = 0
+        self.t_submit = t_submit
+        self.future = future
+        self.done = False
+
+
+class MatchService:
+    def __init__(
+        self,
+        engine,
+        cfg: ServiceConfig = ServiceConfig(),
+        admission: AdmissionConfig | None = None,
+    ):
+        if cfg.schedule not in ("deadline", "cost", "fifo"):
+            raise ValueError(
+                f"unknown schedule {cfg.schedule!r}; use 'deadline', 'cost' or 'fifo'"
+            )
+        if cfg.shed_policy not in ("reject-new", "drop-lowest-priority"):
+            raise ValueError(
+                f"unknown shed_policy {cfg.shed_policy!r}; "
+                "use 'reject-new' or 'drop-lowest-priority'"
+            )
+        self.engine = engine
+        self.cfg = cfg
+        self.admission = AdmissionController(admission or AdmissionConfig())
+        # the inner batch executor: the tick loop's fused match_many +
+        # coalesced update epochs, with compaction deferred off-path
+        self.server = MatchServer(
+            engine,
+            MatchServeConfig(
+                max_batch=cfg.max_batch,
+                index_kind=cfg.index_kind,
+                probe_impl=cfg.probe_impl,
+                join_impl=cfg.join_impl,
+                schedule="fifo",  # ordering is owned by the priority queue
+                max_updates_per_tick=cfg.max_updates_per_tick,
+                max_update_queue=cfg.max_update_queue,
+                compaction="defer" if cfg.background_compaction else "inline",
+            ),
+        )
+        self._queue: asyncio.PriorityQueue = asyncio.PriorityQueue()
+        self._seq = 0
+        self._next_id = 0
+        self._n_queued = 0  # live (not done) entries in the queue
+        self._n_unfinished = 0  # admitted requests not yet terminal
+        self._wake = asyncio.Event()
+        self._running = False
+        self._task: asyncio.Task | None = None
+        self._bg_tasks: set = set()
+        # ONE engine thread (see module docstring); builds go elsewhere
+        self._engine_pool = ThreadPoolExecutor(max_workers=1, thread_name_prefix="gnnpe-engine")
+        self._compact_pool = ThreadPoolExecutor(max_workers=1, thread_name_prefix="gnnpe-compact")
+        self._compact_inflight: set[int] = set()
+        self.responses: dict[int, Response] = {}
+        self.counters = {
+            "submitted": 0, "admitted": 0, "cache_fastpath": 0,
+            OK: 0, REJECTED: 0, SHED: 0, EXPIRED: 0, ERROR: 0, RETRY_EXHAUSTED: 0,
+            "retries": 0, "attempt_timeouts": 0, "evictions": 0,
+            "compactions_installed": 0, "compactions_discarded": 0,
+        }
+
+    # ------------------------------------------------------------- API ----
+    async def start(self) -> "MatchService":
+        assert self._task is None, "service already started"
+        self._running = True
+        self._task = asyncio.create_task(self._serve_loop(), name="match-service-loop")
+        return self
+
+    async def stop(self, drain: bool = True) -> None:
+        if drain:
+            await self.drain()
+        self._running = False
+        self._wake.set()
+        if self._task is not None:
+            await self._task
+            self._task = None
+        for t in list(self._bg_tasks):
+            t.cancel()
+        self._engine_pool.shutdown(wait=True)
+        self._compact_pool.shutdown(wait=True)
+
+    async def drain(self) -> None:
+        """Wait until every admitted request is terminal and no update
+        is pending (backoff sleeps included — nothing is lost)."""
+        while self._n_unfinished or self.server.update_queue:
+            self._wake.set()
+            await asyncio.sleep(0.005)
+
+    def submit(
+        self,
+        query,
+        tenant: str = DEFAULT_TENANT,
+        priority: int = 0,
+        deadline_s: float | None = None,
+    ) -> tuple[int, "asyncio.Future[Response]"]:
+        """Admit one request.  Returns ``(request_id, future)``; the
+        future resolves to a ``Response`` for EVERY outcome — rejected
+        and shed submissions resolve immediately, admitted ones when
+        served, shed, expired, or exhausted.  Lower ``priority`` values
+        are more important (0 = highest)."""
+        loop = asyncio.get_running_loop()
+        fut: asyncio.Future = loop.create_future()
+        rid = self._next_id
+        self._next_id += 1
+        now = time.monotonic()
+        self.counters["submitted"] += 1
+        # overload fast path: answer signature-cached repeats at cache
+        # cost without consuming queue space or quota — under overload
+        # this is the "serve what we already know" degradation mode
+        if self.cfg.cache_fastpath:
+            hit = self.engine.cache_peek(query)
+            if hit is not None:
+                self.counters["cache_fastpath"] += 1
+                return rid, self._finish_new(
+                    fut, rid, tenant, OK, matches=hit, from_cache=True, t_submit=now
+                )
+        admitted, reason = self.admission.admit(tenant)
+        if not admitted:
+            return rid, self._finish_new(fut, rid, tenant, REJECTED, reason=reason, t_submit=now)
+        deadline_s = deadline_s if deadline_s is not None else self.cfg.default_deadline_s
+        deadline = now + deadline_s if deadline_s is not None else None
+        cost = float(self.engine.plan_cost(query)) if self.cfg.schedule != "fifo" else 0.0
+        req = _Pending(rid, tenant, query, priority, deadline, cost, now, fut)
+        if self._n_queued >= self.cfg.max_queue and not self._make_room(req, now):
+            self.admission.release(tenant)
+            return rid, self._finish_new(
+                fut, rid, tenant, SHED, reason="queue-full", t_submit=now
+            )
+        self._n_unfinished += 1
+        self._push(req, now)
+        return rid, fut
+
+    def submit_update(self, update) -> None:
+        """Queue one ``GraphUpdate`` (bounded by ``max_update_queue``);
+        coalesced into the next update tick."""
+        self.server.submit_update(update)  # raises QueueFull at capacity
+        self._wake.set()
+
+    def tick_stats(self) -> list:
+        """The inner executor's per-tick records (batch size, wall,
+        per-tick error counts) — see MatchServer.tick_stats."""
+        return self.server.tick_stats
+
+    # ----------------------------------------------------------- queue ----
+    def _rank(self, req: _Pending, now: float) -> float:
+        if self.cfg.schedule == "fifo":
+            return 0.0
+        if self.cfg.schedule == "cost" or req.deadline is None:
+            slack = self.cfg.deadline_horizon_s
+        else:
+            slack = min(max(req.deadline - now, 1e-3), self.cfg.deadline_horizon_s)
+        # cheapest-and-most-urgent first: scaling cost by remaining slack
+        # serves a cheap urgent query before an expensive lazy one and
+        # ranks two equally-urgent queries by cost, degenerating to the
+        # tick loop's pure cost order when nothing carries a deadline
+        return req.cost * slack
+
+    def _push(self, req: _Pending, now: float) -> None:
+        self._seq += 1
+        self._queue.put_nowait(((req.priority, self._rank(req, now), self._seq), req))
+        self._n_queued += 1
+        self._wake.set()
+
+    def _make_room(self, incoming: _Pending, now: float) -> bool:
+        """Overload: under "drop-lowest-priority", shed the worst queued
+        request iff the newcomer strictly outranks it.  Returns whether
+        room was made."""
+        if self.cfg.shed_policy != "drop-lowest-priority":
+            return False
+        worst_key, worst = None, None
+        for key, req in self._queue._queue:  # heap scan; queue is bounded
+            if req.done:
+                continue
+            if worst_key is None or key > worst_key:
+                worst_key, worst = key, req
+        if worst is None or (incoming.priority, self._rank(incoming, now)) >= worst_key[:2]:
+            return False
+        worst.done = True  # lazy-deleted at pop
+        self._n_queued -= 1
+        self.counters["evictions"] += 1
+        self._resolve(worst, SHED, reason="evicted-by-higher-priority")
+        return True
+
+    def _next_batch(self, now: float) -> list:
+        """Pop up to ``max_batch`` live requests; expired ones resolve as
+        EXPIRED here — shed before they burn any tick time."""
+        batch: list[_Pending] = []
+        while len(batch) < self.cfg.max_batch:
+            try:
+                _, req = self._queue.get_nowait()
+            except asyncio.QueueEmpty:
+                break
+            if req.done:
+                continue  # evicted by _make_room
+            self._n_queued -= 1
+            if req.deadline is not None and now > req.deadline:
+                req.done = True
+                self._resolve(req, EXPIRED, reason="deadline-exceeded-in-queue")
+                continue
+            batch.append(req)
+        return batch
+
+    # -------------------------------------------------------- outcomes ----
+    def _finish_new(self, fut, rid, tenant, status, matches=None, reason="",
+                    from_cache=False, t_submit=0.0):
+        """Resolve a submission that never entered the queue."""
+        resp = Response(
+            request_id=rid, tenant=tenant, status=status, matches=matches,
+            reason=reason, from_cache=from_cache, latency_s=0.0,
+        )
+        self.responses[rid] = resp
+        self.counters[status] += 1
+        fut.set_result(resp)
+        return fut
+
+    def _resolve(self, req: _Pending, status: str, matches=None, reason="") -> None:
+        resp = Response(
+            request_id=req.rid, tenant=req.tenant, status=status, matches=matches,
+            reason=reason, attempts=req.attempts,
+            latency_s=time.monotonic() - req.t_submit,
+        )
+        self.responses[req.rid] = resp
+        self.counters[status] += 1
+        self.admission.release(req.tenant)
+        self._n_unfinished -= 1
+        if not req.future.done():
+            req.future.set_result(resp)
+
+    def _handle_transient(self, req: _Pending, reason: str, now: float) -> None:
+        """A retryable failure (TransientError or attempt timeout):
+        re-enqueue with exponential backoff, within budget and deadline."""
+        req.attempts += 1
+        if req.attempts > self.cfg.max_retries:
+            req.done = True
+            self._resolve(req, RETRY_EXHAUSTED, reason=reason)
+            return
+        delay = min(
+            self.cfg.backoff_max_s,
+            self.cfg.backoff_base_s * self.cfg.backoff_factor ** (req.attempts - 1),
+        )
+        if req.deadline is not None and now + delay > req.deadline:
+            req.done = True
+            self._resolve(req, EXPIRED, reason=f"deadline-before-retry ({reason})")
+            return
+        self.counters["retries"] += 1
+        task = asyncio.get_running_loop().create_task(self._requeue_after(req, delay))
+        self._bg_tasks.add(task)
+        task.add_done_callback(self._bg_tasks.discard)
+
+    async def _requeue_after(self, req: _Pending, delay: float) -> None:
+        await asyncio.sleep(delay)
+        self._push(req, time.monotonic())
+
+    # ------------------------------------------------------------- loop ---
+    def _has_work(self) -> bool:
+        return bool(self._n_queued or self.server.update_queue)
+
+    async def _serve_loop(self) -> None:
+        loop = asyncio.get_running_loop()
+        while self._running:
+            if not self._has_work():
+                self._wake.clear()
+                if not self._has_work():  # submit may have raced the clear
+                    try:
+                        await asyncio.wait_for(self._wake.wait(), self.cfg.idle_tick_s)
+                    except (asyncio.TimeoutError, TimeoutError):
+                        pass  # heartbeat: retry deferred compaction installs
+                if not self._running:
+                    break
+            if self.server.update_queue:
+                # one coalesced apply_updates epoch on the engine thread;
+                # compaction is deferred, so the epoch cost is bounded by
+                # the touched set, not by re-pack work
+                await loop.run_in_executor(self._engine_pool, self.server.apply_update_tick)
+            self._schedule_compactions()
+            batch = self._next_batch(time.monotonic())
+            if batch:
+                await self._run_batch(batch)
+
+    async def _run_batch(self, batch: list) -> None:
+        loop = asyncio.get_running_loop()
+        queries = [r.query for r in batch]
+        fut = loop.run_in_executor(
+            self._engine_pool, lambda: self.server.execute_batch(queries, isolate=True)
+        )
+        try:
+            results, _ = await asyncio.wait_for(fut, timeout=self.cfg.attempt_timeout_s)
+        except (asyncio.TimeoutError, TimeoutError):
+            # the tick is stuck (slow or hung engine call).  The engine
+            # thread will finish it eventually — single-thread executor
+            # keeps the engine consistent — but its results are stale by
+            # then; every rider is retried like a transient fault.
+            self.counters["attempt_timeouts"] += 1
+            now = time.monotonic()
+            for req in batch:
+                self._handle_transient(req, "attempt-timeout", now)
+            return
+        now = time.monotonic()
+        for req, (ok, value) in zip(batch, results):
+            if ok:
+                req.done = True
+                self._resolve(req, OK, matches=value)
+            elif isinstance(value, TransientError):
+                self._handle_transient(req, f"transient: {value}", now)
+            else:
+                # quarantined: this request deterministically raises; the
+                # bisecting re-execution already salvaged its tick-mates
+                req.done = True
+                self._resolve(
+                    req, ERROR, reason=f"quarantined: {type(value).__name__}: {value}"
+                )
+
+    # -------------------------------------------------- bg compaction -----
+    def _schedule_compactions(self) -> None:
+        if not self.cfg.background_compaction:
+            return
+        for mi in self.engine.pending_compactions():
+            if mi in self._compact_inflight:
+                continue
+            self._compact_inflight.add(mi)
+            task = asyncio.get_running_loop().create_task(self._compact(mi))
+            self._bg_tasks.add(task)
+            task.add_done_callback(self._bg_tasks.discard)
+
+    async def _compact(self, mi: int) -> None:
+        """snapshot (engine thread) → build (compaction thread) →
+        install (engine thread).  An update racing past the snapshot
+        makes install refuse; the partition stays pending and a later
+        heartbeat retries with a fresh snapshot."""
+        loop = asyncio.get_running_loop()
+        try:
+            snap = await loop.run_in_executor(
+                self._engine_pool, self.engine.prepare_compaction, mi
+            )
+            new_index = await loop.run_in_executor(
+                self._compact_pool, self.engine.build_compaction, snap
+            )
+            installed = await loop.run_in_executor(
+                self._engine_pool, self.engine.install_compaction, snap, new_index
+            )
+            self.counters[
+                "compactions_installed" if installed else "compactions_discarded"
+            ] += 1
+        finally:
+            self._compact_inflight.discard(mi)
