@@ -1,0 +1,141 @@
+"""Standing queries vs re-match-per-update (``BENCH_standing.json``).
+
+N standing queries ride a mixed update stream whose edge churn is
+localized to a small vertex region, so most subscriptions are untouched
+at any given epoch (~90/10 untouched/touched — the live-serving shape:
+many watchers, localized writes).  Each epoch measures
+
+* **subscription tick** — ``StandingQueryRegistry.on_epoch()``: the
+  touched-partition bookkeeping skips unaffected subscriptions outright,
+  probes ONLY this epoch's fresh delta rows for the affected ones, and
+  joins only affected candidate sets (serve/standing.py), vs
+* **re-match-per-update** — from-scratch ``match_many`` of every
+  registered query against the same post-update index (what a serving
+  tier without standing queries must do to keep results current).
+
+The baseline's results double as the referee: at every epoch each
+subscription's accumulated ``added``/``retracted`` deltas must replay to
+the from-scratch match set exactly.  CI gates ``match_sets_identical``
+and ``speedup_ge_3x`` via benchmarks/compare.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import GraphUpdate
+from repro.graphs import newman_watts_strogatz
+from repro.serve.standing import StandingQueryRegistry
+
+from .common import build_engine, emit, sample_queries
+
+N_SUBS = 20
+EPOCHS = 8
+EDGES_PER_EPOCH = 3
+LOCAL = 120  # churn confined to vertices [0, LOCAL): ~one partition's region
+SHORTCUT_P = 0.005  # low small-world rewiring so 2-hop balls stay local
+
+
+def _local_update(rng, g) -> GraphUpdate:
+    e = g.edge_array()
+    local = e[(e[:, 0] < LOCAL) & (e[:, 1] < LOCAL)]
+    k = min(EDGES_PER_EPOCH, local.shape[0])
+    rem = local[rng.choice(local.shape[0], size=k, replace=False)] if k else None
+    add = rng.integers(0, LOCAL, size=(EDGES_PER_EPOCH, 2))
+    kw = {"add_edges": add}
+    if rem is not None:
+        kw["remove_edges"] = rem
+    return GraphUpdate(**kw)
+
+
+def run(full: bool = False, json_path: str | None = None) -> dict:
+    n = 10_000 if full else 4_000
+    # mostly-ring topology: BFS partitions come out as contiguous arcs,
+    # so [0, LOCAL) churn mutates ~2 of ~25 partitions (at the default
+    # NWS p=0.1 every 2-hop ball crosses a shortcut and the churn
+    # scatters across most partitions — no untouched majority to skip)
+    g = newman_watts_strogatz(n, k=4, p=SHORTCUT_P, n_labels=100, seed=17)
+    eng = build_engine(g, partition_size=160)
+    queries = sample_queries(g, n=N_SUBS, seed0=900)
+    rng = np.random.default_rng(4)
+
+    reg = StandingQueryRegistry(eng)
+    accs: dict[int, set] = {}
+    subs: list[tuple[int, object]] = []
+    for q in queries:
+        sid, initial = reg.register(q)
+        accs[sid] = set(initial.added)
+        subs.append((sid, q))
+
+    t_standing = 0.0
+    t_rematch = 0.0
+    identical = True
+    for _ in range(EPOCHS):
+        eng.apply_updates(_local_update(rng, eng.graph))
+        t0 = time.perf_counter()
+        deltas = reg.on_epoch()
+        t_standing += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        baseline = eng.match_many([q for _, q in subs])
+        t_rematch += time.perf_counter() - t0
+        for (sid, _), ref in zip(subs, baseline):
+            d = deltas.get(sid)
+            if d is not None:
+                accs[sid] = (accs[sid] - set(d.retracted)) | set(d.added)
+            identical &= accs[sid] == {tuple(int(v) for v in m) for m in ref}
+
+    st = reg.stats()
+    n_evals = EPOCHS * len(subs)
+    affected_frac = (st["advanced"] + st["refreshed"]) / max(n_evals, 1)
+    speedup = t_rematch / max(t_standing, 1e-12)
+    emit(
+        "standing/tick_total",
+        1e6 * t_standing,
+        f"subs={len(subs)} epochs={EPOCHS} affected={affected_frac:.0%}",
+    )
+    emit(
+        "standing/rematch_total",
+        1e6 * t_rematch,
+        f"speedup={speedup:.1f}x identical={identical}",
+    )
+
+    rec = {
+        "n_vertices": int(g.n_vertices),
+        "n_partitions": len(eng.models),
+        "n_subscriptions": len(subs),
+        "n_epochs": EPOCHS,
+        "edges_per_epoch": EDGES_PER_EPOCH,
+        "standing_tick_s": t_standing,
+        "rematch_s": t_rematch,
+        "standing_speedup": speedup,
+        "speedup_ge_3x": bool(speedup >= 3.0),
+        "affected_frac": affected_frac,
+        "n_advanced": int(st["advanced"]),
+        "n_skipped": int(st["skipped"]),
+        "n_refreshed": int(st["refreshed"]),
+        "match_sets_identical": bool(identical),
+    }
+    json_path = json_path or os.environ.get("BENCH_JSON")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    rec = run(full=args.full, json_path=args.json)
+    print(
+        f"# standing tick {rec['standing_speedup']:.1f}x over re-match-per-update "
+        f"({rec['affected_frac']:.0%} of subscription-epochs affected); "
+        f"identical={rec['match_sets_identical']}"
+    )

@@ -27,6 +27,7 @@ def main() -> None:
         bench_query_scaling,
         bench_serving,
         bench_stacked,
+        bench_standing,
         bench_updates,
         bench_vs_baselines,
     )
@@ -37,6 +38,7 @@ def main() -> None:
         ("stacked", bench_stacked.run),
         ("updates", bench_updates.run),
         ("serving", bench_serving.run),
+        ("standing", bench_standing.run),
         ("join", bench_join.run),
         ("fig8_pruning", bench_pruning.run),
         ("fig9_baselines", bench_vs_baselines.run),

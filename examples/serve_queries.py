@@ -25,9 +25,20 @@ reporting p50/p95/p99 plus the shed/expired/retry counters.
 probability P — the chaos smoke: every request must still complete with
 exact matches, via retries.
 
+``--subscribe`` (with ``--service``) additionally registers standing
+queries (serve/standing.py) before the stream starts: every update tick
+pushes an incremental MatchDelta to each subscription's queue, with
+transiently-faulted subscription ticks retried by the serve loop's
+heartbeat.  At the final epoch the driver asserts zero lost deltas (no
+handle shed or quarantined) and that each subscription's accumulated
+delta replay is identical to a from-scratch match — the standing-query
+chaos smoke CI runs.
+
     PYTHONPATH=src python examples/serve_queries.py [--n 4000] [--requests 60]
     PYTHONPATH=src python examples/serve_queries.py --update-every 5 --cache
     PYTHONPATH=src python examples/serve_queries.py --service --fault-rate 0.2
+    PYTHONPATH=src python examples/serve_queries.py --service --subscribe \
+        --update-every 3 --fault-rate 0.15
 """
 import argparse
 import asyncio
@@ -62,6 +73,16 @@ async def _run_service(engine, args, rng):
         ),
     )
     await svc.start()
+    subs = []
+    if args.subscribe:
+        for i in range(6):
+            try:
+                sq = random_connected_query(engine.graph, 5 + i % 2, seed=2000 + i)
+            except RuntimeError:
+                continue
+            handle = await svc.subscribe(sq, tenant=f"tenant-{i % 3}")
+            assert handle.ok, f"subscription rejected: {handle.reason}"
+            subs.append((handle, sq))
     sent = []
     t_serve = time.perf_counter()
     for r in range(args.requests):
@@ -82,6 +103,32 @@ async def _run_service(engine, args, rng):
         await asyncio.sleep(0)  # arrival yields: ticks interleave with submits
     resps = await asyncio.gather(*(f for _, _, f in sent))
     wall = time.perf_counter() - t_serve
+    if subs:
+        # wait for every subscription to reach the final epoch — the serve
+        # loop's heartbeat retries transiently-faulted subscription ticks
+        while svc.server.standing_lagging():
+            await asyncio.sleep(0.02)
+        await asyncio.sleep(0.05)  # let queued threadsafe deliveries flush
+        loop = asyncio.get_running_loop()
+        refs = await loop.run_in_executor(
+            svc._engine_pool, lambda: engine.match_many([q for _, q in subs])
+        )
+        n_deltas = 0
+        for (handle, _), ref in zip(subs, refs):
+            assert handle.ok, \
+                f"subscription {handle.sub_id} lost: {handle.status} ({handle.reason})"
+            acc: set = set()
+            while not handle.deltas.empty():
+                d = handle.deltas.get_nowait()
+                assert not d.error, f"terminal subscription error: {d.error}"
+                n_deltas += 1
+                acc = (acc - set(d.retracted)) | set(d.added)
+            assert acc == {tuple(int(v) for v in m) for m in ref}, \
+                "incremental delta replay != from-scratch match at final epoch"
+        print(
+            f"[service] standing: {len(subs)} subscriptions, {n_deltas} deltas, "
+            f"zero lost — incremental ≡ from-scratch at the final epoch"
+        )
     await svc.stop()
 
     ok = [resp for resp in resps if resp.ok]
@@ -167,6 +214,12 @@ def main():
         "--service", action="store_true",
         help="serve through the async multi-tenant tier (serve/service.py) "
         "instead of the bare tick loop: admission, deadlines, retries",
+    )
+    ap.add_argument(
+        "--subscribe", action="store_true",
+        help="with --service: register standing queries and assert that "
+        "their accumulated incremental deltas equal a from-scratch match "
+        "at the final epoch, with zero deltas lost",
     )
     ap.add_argument(
         "--fault-rate", type=float, default=0.0,

@@ -257,6 +257,29 @@ class PartitionDelta:
         return int(total)
 
 
+@dataclasses.dataclass(frozen=True)
+class FreshRows:
+    """The rows one ``append`` added to a partition's buffer, as a
+    standalone probe target.
+
+    Duck-types the ``PartitionDelta`` leaf payload (``n_rows``/``emb``/
+    ``emb0``/``emb_multi``/``emb_q``/``label_hash``) so
+    ``probe_delta_multi`` runs on just this epoch's fresh rows — the
+    standing-query tier probes these instead of the whole buffer.
+    """
+
+    paths: np.ndarray  # (B, l+1) int32
+    emb: np.ndarray  # (B, D) float32
+    emb0: np.ndarray  # (B, D0) float32
+    emb_multi: np.ndarray  # (n_gnn, B, D) float32
+    emb_q: np.ndarray | None  # (B, Dcat) int8
+    label_hash: np.ndarray | None  # (B,) int64
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.paths.shape[0])
+
+
 def _empty_delta(index: PackedIndex) -> PartitionDelta:
     P = index.n_paths
     L = index.paths.shape[1] if index.paths.ndim == 2 else 1
@@ -323,21 +346,28 @@ class DeltaIndex:
         emb0: np.ndarray,
         emb_multi: np.ndarray,
         path_labels: np.ndarray | None = None,
-    ) -> None:
+    ) -> FreshRows | None:
         """Append re-embedded affected paths to partition ``mi``'s buffer.
 
         The int8/label-hash sidecar is derived here with the same
         ``quantize_data``/``hash_labels`` the offline builder uses, so
-        buffer rows prefilter exactly like main rows.
+        buffer rows prefilter exactly like main rows.  Returns the
+        appended rows as a :class:`FreshRows` probe target (``None``
+        when the append is empty) so incremental standing-query
+        evaluation can probe exactly this epoch's additions.
         """
         if paths.shape[0] == 0:
-            return
+            return None
         dp = self.parts[mi]
         dp.version += 1
-        dp.paths = np.concatenate([dp.paths, paths.astype(np.int32)])
-        dp.emb = np.concatenate([dp.emb, emb.astype(np.float32)])
-        dp.emb0 = np.concatenate([dp.emb0, emb0.astype(np.float32)])
-        dp.emb_multi = np.concatenate([dp.emb_multi, emb_multi.astype(np.float32)], axis=1)
+        fresh = FreshRows(
+            paths=paths.astype(np.int32),
+            emb=emb.astype(np.float32),
+            emb0=emb0.astype(np.float32),
+            emb_multi=emb_multi.astype(np.float32),
+            emb_q=None,
+            label_hash=None,
+        )
         if dp.emb_q is not None:
             n_gnn = emb_multi.shape[0]
             cat = (
@@ -345,10 +375,19 @@ class DeltaIndex:
                 if n_gnn
                 else emb
             )
-            dp.emb_q = np.concatenate([dp.emb_q, quantize_data(cat)])
+            fresh = dataclasses.replace(fresh, emb_q=quantize_data(cat))
         if dp.label_hash is not None:
             assert path_labels is not None, "quantized delta needs path labels"
-            dp.label_hash = np.concatenate([dp.label_hash, hash_labels(path_labels)])
+            fresh = dataclasses.replace(fresh, label_hash=hash_labels(path_labels))
+        dp.paths = np.concatenate([dp.paths, fresh.paths])
+        dp.emb = np.concatenate([dp.emb, fresh.emb])
+        dp.emb0 = np.concatenate([dp.emb0, fresh.emb0])
+        dp.emb_multi = np.concatenate([dp.emb_multi, fresh.emb_multi], axis=1)
+        if dp.emb_q is not None:
+            dp.emb_q = np.concatenate([dp.emb_q, fresh.emb_q])
+        if dp.label_hash is not None:
+            dp.label_hash = np.concatenate([dp.label_hash, fresh.label_hash])
+        return fresh
 
     # ------------------------------------------------------------------
     def live_rows(self, mi: int, rows: np.ndarray) -> np.ndarray:

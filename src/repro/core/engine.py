@@ -192,6 +192,10 @@ class GnnPeEngine:
         # (apply_updates(compaction="defer")) — drained by the serving
         # tier's background compactor via prepare/build/install_compaction
         self._pending_compaction: set[int] = set()
+        # what the LAST apply_updates epoch changed, in probe-able form
+        # (touched vertices + per-partition FreshRows) — the standing-query
+        # tier consumes this via epoch_fresh()/match_incremental
+        self._last_epoch_update: dict | None = None
         self._result_cache = None
         if cfg.cache:
             from ..serve.cache import ResultCache  # lazy: avoids core↔serve cycle
@@ -351,6 +355,7 @@ class GnnPeEngine:
         self.delta = DeltaIndex([m.index for m in self.models]) if self.models else None
         self._pending_compaction.clear()
         self.epoch = 0
+        self._last_epoch_update = None
         self._emb_fingerprint = self._content_fingerprint()
         # dr plans probed the PREVIOUS build's indexes; the fingerprint alone
         # is a coarse content digest, so drop the whole plan cache (deg plans
@@ -611,6 +616,9 @@ class GnnPeEngine:
             self._bump_fingerprint(b"rebuild" + np.int64(self.epoch).tobytes())
             if self._result_cache is not None:
                 self._result_cache.clear()
+            # rebuild re-packs everything: no per-row fresh bookkeeping,
+            # standing queries must fall back to a full refresh
+            self._last_epoch_update = {"epoch": self.epoch, "strategy": "rebuild"}
             return {
                 "epoch": self.epoch,
                 "strategy": "rebuild",
@@ -625,6 +633,7 @@ class GnnPeEngine:
         L = cfg.path_length
         reach = l_hop_reach(g, touched, L) if touched.size else np.zeros(0, np.int64)
         mutated: dict[int, dict] = {}
+        fresh_map: dict[int, object] = {}
         compacted: list[int] = []
         n_delta_rows = 0
         n_tombstoned = 0
@@ -662,7 +671,9 @@ class GnnPeEngine:
                     if cfg.n_multi
                     else np.zeros((0, paths.shape[0], emb.shape[1]), np.float32)
                 )
-                delta.append(mi, paths, emb, emb0, emb_multi, path_labels=g.labels[paths])
+                fresh = delta.append(mi, paths, emb, emb0, emb_multi, path_labels=g.labels[paths])
+                if fresh is not None:
+                    fresh_map[mi] = fresh
                 n_delta_rows += paths.shape[0]
             if n_tomb or dropped or paths.shape[0]:
                 mutated[mi] = {
@@ -699,6 +710,13 @@ class GnnPeEngine:
             )
             if self._result_cache is not None:
                 self._result_cache.invalidate(mutated)
+        self._last_epoch_update = {
+            "epoch": self.epoch,
+            "strategy": "delta",
+            "touched": touched,
+            "mutated": mutated,
+            "fresh": fresh_map,
+        }
         return {
             "epoch": self.epoch,
             "strategy": "delta",
@@ -877,6 +895,31 @@ class GnnPeEngine:
             return self.match_many_isolated(queries[:mid], **kw) + self.match_many_isolated(
                 queries[mid:], **kw
             )
+
+    # ------------------------------------------------------------------
+    # Standing queries (§serve/standing.py)
+    # ------------------------------------------------------------------
+    def epoch_fresh(self) -> dict | None:
+        """What the last ``apply_updates`` epoch changed, in probe-able
+        form: ``{"epoch", "strategy", "touched", "mutated", "fresh"}``
+        where ``fresh`` maps mutated partition → this epoch's appended
+        delta rows as a ``FreshRows`` probe target.  ``strategy ==
+        "rebuild"`` entries carry no row bookkeeping (standing queries
+        fall back to a full refresh); ``None`` until the first update."""
+        return self._last_epoch_update
+
+    def match_incremental(self, q: Graph, state=None):
+        """Standing-query evaluation step: returns ``(state, MatchDelta)``.
+
+        First call (``state=None``) runs a full evaluation through the
+        probe/join pipeline and reports every match as added; subsequent
+        calls advance the cached state to the current epoch by probing
+        only this epoch's fresh delta rows (see serve/standing.py for
+        the algorithm and its exactness argument).
+        """
+        from ..serve.standing import advance_standing  # lazy: avoids core↔serve cycle
+
+        return advance_standing(self, q, state)
 
     def cache_peek(self, q: Graph):
         """Result-cache lookup WITHOUT running the pipeline: the query's

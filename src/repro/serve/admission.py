@@ -10,6 +10,11 @@ can starve the rest or grow state without bound:
   requests per tenant (queued, in flight, or in retry backoff).  Beyond
   that, REJECTED (``tenant-backlog``): one slow tenant's pile-up cannot
   consume the global queue.
+* **subscription caps** — at most ``max_subscriptions`` live standing
+  queries per tenant (serve/standing.py).  A subscription is long-lived
+  state the engine pays for on every update tick, so it is capped by
+  count, not by rate: ``admit_subscription`` at registration,
+  ``release_subscription`` when it ends (unsubscribe, shed, quarantine).
 
 Admission answers only the per-tenant question; the *global* queue cap
 and the shed policy under overload (drop-lowest-priority, cache-hit
@@ -33,6 +38,7 @@ class TenantQuota:
     rate: float = float("inf")  # sustained admits/s (token refill rate)
     burst: float = 64.0  # bucket capacity (instantaneous burst)
     max_backlog: int = 64  # admitted-but-unfinished cap
+    max_subscriptions: int = 16  # live standing queries per tenant
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +72,7 @@ class _TenantState:
     backlog: int = 0
     admitted: int = 0
     rejected: int = 0
+    subscriptions: int = 0  # live standing queries
 
 
 class AdmissionController:
@@ -108,12 +115,39 @@ class AdmissionController:
             st.backlog -= 1
 
     # ------------------------------------------------------------------
+    def admit_subscription(self, tenant: str) -> tuple[bool, str]:
+        """Charge one standing-query registration against ``tenant``'s
+        subscription cap (count-based — no token cost; per-delta work is
+        already bounded by the registry's skip/probe machinery)."""
+        st = self._state(tenant)
+        if st.subscriptions >= self.quota(tenant).max_subscriptions:
+            st.rejected += 1
+            return False, "tenant-subscriptions"
+        st.subscriptions += 1
+        return True, ""
+
+    def release_subscription(self, tenant: str) -> None:
+        """One subscription ended (unsubscribed, shed, or quarantined)."""
+        st = self._tenants.get(tenant)
+        if st is not None and st.subscriptions > 0:
+            st.subscriptions -= 1
+
+    # ------------------------------------------------------------------
     def backlog(self, tenant: str) -> int:
         st = self._tenants.get(tenant)
         return st.backlog if st is not None else 0
 
+    def subscriptions(self, tenant: str) -> int:
+        st = self._tenants.get(tenant)
+        return st.subscriptions if st is not None else 0
+
     def stats(self) -> dict:
         return {
-            t: {"backlog": st.backlog, "admitted": st.admitted, "rejected": st.rejected}
+            t: {
+                "backlog": st.backlog,
+                "admitted": st.admitted,
+                "rejected": st.rejected,
+                "subscriptions": st.subscriptions,
+            }
             for t, st in sorted(self._tenants.items())
         }

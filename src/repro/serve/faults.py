@@ -95,3 +95,11 @@ class FlakyEngine:
         # run the engine's bisecting isolation over *this* wrapper so
         # sub-batches re-roll the fault schedule (self.match_many above)
         return GnnPeEngine.match_many_isolated(self, queries, **kw)
+
+    def match_incremental(self, q, state=None):
+        # standing-query evaluation faults on the same schedule, so the
+        # registry's retry (transient) and quarantine (poison) paths get
+        # chaos coverage; a fault here leaves `state` untouched (the
+        # incremental step commits only on success)
+        self._maybe_fault([q])
+        return self._engine.match_incremental(q, state)

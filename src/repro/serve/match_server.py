@@ -31,6 +31,13 @@ on empty ticks.  The asyncio tier (serve/service.py) keeps this class
 as its inner batch executor via ``execute_batch``/``apply_update_tick``
 (it owns admission, deadlines and retries itself).
 
+Standing queries (§serve/standing.py): ``subscribe`` registers a query
+with the engine-backed ``StandingQueryRegistry``; every update tick is
+followed by a subscription tick (``registry.on_epoch()``) on the same
+thread, so a subscriber's accumulated deltas always equal a from-scratch
+match at the epoch the tick installed — one-shot queries and standing
+deltas interleave on one loop.
+
 CPU-scale tests drive a tiny engine; the same server loop fronts a
 paper-scale index unchanged.
 """
@@ -104,6 +111,10 @@ class MatchServer:
         self.n_updates_applied = 0
         self.update_summaries: list = []  # apply_updates summaries, in order
         self.tick_stats: list = []  # per query tick: batch size, wall, cost span
+        # standing queries: registry built lazily on first subscribe();
+        # match_deltas logs every emitted MatchDelta per subscription
+        self.registry = None
+        self.match_deltas: dict[int, list] = {}
         # wake-on-submit: a driving loop parks on wait_for_work() instead
         # of spinning step() against two empty queues
         self._wake = threading.Event()
@@ -147,10 +158,55 @@ class MatchServer:
             return True
         return self._wake.wait(timeout)
 
+    # ----------------------------------------- standing subscriptions ----
+    def subscribe(self, query, callback=None, tenant: str = "") -> int:
+        """Register a standing query.  Returns its subscription id; the
+        initial full evaluation lands in ``match_deltas[sub_id][0]``
+        (everything as ``added``).  Subsequent deltas append after every
+        update tick; ``callback(sub_id, delta)``, if given, fires on the
+        tick (engine) thread for each non-empty delta."""
+        if self.registry is None:
+            from .standing import StandingQueryRegistry
+
+            self.registry = StandingQueryRegistry(self.engine)
+        sub_id, initial = self.registry.register(query, callback=callback, tenant=tenant)
+        self.match_deltas[sub_id] = [initial]
+        return sub_id
+
+    def unsubscribe(self, sub_id: int) -> bool:
+        return self.registry is not None and self.registry.unregister(sub_id)
+
+    def standing_matches(self, sub_id: int) -> list:
+        """The subscription's accumulated current match set (canonical
+        order) — what applying its delta stream to the initial snapshot
+        yields."""
+        return self.registry.matches(sub_id)
+
+    def standing_lagging(self) -> bool:
+        """Any active subscription behind the engine epoch?  (Happens
+        only after an evaluation fault — the service heartbeat calls
+        ``poll_standing`` to retry.)"""
+        return self.registry is not None and self.registry.lagging()
+
+    def poll_standing(self) -> int:
+        """Run one subscription tick outside an update tick (fault
+        retry/catch-up).  Returns how many deltas were emitted."""
+        return self._standing_tick()
+
+    def _standing_tick(self) -> int:
+        if self.registry is None:
+            return 0
+        deltas = self.registry.on_epoch()
+        for sid, d in deltas.items():
+            self.match_deltas.setdefault(sid, []).append(d)
+        return len(deltas)
+
     # ----------------------------------------------------- tick pieces ----
     def apply_update_tick(self) -> int:
         """Coalesce up to ``max_updates_per_tick`` queued updates into ONE
-        ``apply_updates`` index epoch.  Returns how many were applied."""
+        ``apply_updates`` index epoch, then run the subscription tick so
+        standing queries see the epoch their update installed.  Returns
+        how many updates were applied."""
         if not self.update_queue:
             return 0
         n_upd = self.cfg.max_updates_per_tick
@@ -159,6 +215,7 @@ class MatchServer:
         self.update_summaries.append(
             self.engine.apply_updates(batch_u, compaction=self.cfg.compaction)
         )
+        self._standing_tick()
         self.update_s.append(time.perf_counter() - t_u)
         self.n_updates_applied += len(batch_u)
         return len(batch_u)

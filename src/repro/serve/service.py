@@ -36,6 +36,20 @@ Every submission gets an ``asyncio.Future[Response]`` — nothing blocks,
 nothing is silently dropped, and every non-ok outcome carries a
 structured ``reason``.
 
+Standing queries ride the same machinery: ``subscribe`` registers a
+query with the tick loop's ``StandingQueryRegistry`` (per-tenant
+subscription caps in serve/admission.py) and returns a
+``SubscriptionHandle`` whose ``deltas`` asyncio queue receives a
+``MatchDelta`` after every update tick that changes the result set.
+The shed/quarantine semantics extend to subscriptions: a consumer that
+falls more than ``max_deltas_buffered`` deltas behind is SHED (the
+subscription closes rather than stall the tick thread or grow without
+bound), and a subscription whose evaluation fails deterministically is
+quarantined by the registry and surfaces a terminal ``error`` delta.
+Transient faults never lose deltas: the registry retries on the next
+tick (or the idle heartbeat) and the missed epochs coalesce into one
+exact catch-up diff.
+
 Threading model: ONE engine executor thread owns every engine mutation
 (update epochs, query ticks, compaction snapshot/install), so the
 engine needs no locks; only the pure ``build_compaction`` re-pack runs
@@ -54,7 +68,7 @@ from .admission import DEFAULT_TENANT, AdmissionConfig, AdmissionController
 from .errors import TransientError
 from .match_server import MatchServeConfig, MatchServer
 
-__all__ = ["ServiceConfig", "Response", "MatchService"]
+__all__ = ["ServiceConfig", "Response", "SubscriptionHandle", "MatchService"]
 
 # terminal request statuses
 OK = "ok"
@@ -93,6 +107,10 @@ class ServiceConfig:
     max_update_queue: int = 0  # 0 = unbounded (updates are operator traffic)
     background_compaction: bool = True
     idle_tick_s: float = 0.5  # loop heartbeat when idle (retries pending installs)
+    # standing queries: per-subscription delta buffer; a consumer that
+    # falls further behind is SHED (subscription closed) instead of
+    # stalling the tick thread or growing memory without bound
+    max_deltas_buffered: int = 256
 
 
 @dataclasses.dataclass
@@ -105,6 +123,28 @@ class Response:
     attempts: int = 0
     from_cache: bool = False
     latency_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.status == OK
+
+
+@dataclasses.dataclass
+class SubscriptionHandle:
+    """One tenant's live standing query, as seen from async land.
+
+    ``deltas`` receives every ``MatchDelta`` in epoch order, the initial
+    full evaluation first (everything as ``added``).  ``status`` stays
+    ``"ok"`` while live; terminal states are ``"rejected"`` (admission
+    cap), ``"shed"`` (consumer fell behind), ``"error"`` (evaluation
+    quarantined — a terminal delta with ``error`` set is enqueued), and
+    ``"unsubscribed"``."""
+
+    sub_id: int
+    tenant: str
+    status: str
+    reason: str = ""
+    deltas: asyncio.Queue | None = None
 
     @property
     def ok(self) -> bool:
@@ -178,11 +218,14 @@ class MatchService:
         self._compact_pool = ThreadPoolExecutor(max_workers=1, thread_name_prefix="gnnpe-compact")
         self._compact_inflight: set[int] = set()
         self.responses: dict[int, Response] = {}
+        self.subscriptions: dict[int, SubscriptionHandle] = {}
         self.counters = {
             "submitted": 0, "admitted": 0, "cache_fastpath": 0,
             OK: 0, REJECTED: 0, SHED: 0, EXPIRED: 0, ERROR: 0, RETRY_EXHAUSTED: 0,
             "retries": 0, "attempt_timeouts": 0, "evictions": 0,
             "compactions_installed": 0, "compactions_discarded": 0,
+            "subscribed": 0, "subs_rejected": 0, "subs_shed": 0,
+            "subs_quarantined": 0, "deltas_delivered": 0,
         }
 
     # ------------------------------------------------------------- API ----
@@ -266,6 +309,105 @@ class MatchService:
         """The inner executor's per-tick records (batch size, wall,
         per-tick error counts) — see MatchServer.tick_stats."""
         return self.server.tick_stats
+
+    # --------------------------------------------- standing queries -------
+    async def subscribe(self, query, tenant: str = DEFAULT_TENANT) -> SubscriptionHandle:
+        """Register a standing query for ``tenant``.
+
+        The registration's full evaluation runs on the engine thread
+        (like any other engine work); the returned handle's ``deltas``
+        queue already holds the initial snapshot delta.  Rejected
+        registrations (per-tenant subscription cap) return immediately
+        with ``status="rejected"`` and no queue."""
+        loop = asyncio.get_running_loop()
+        admitted, reason = self.admission.admit_subscription(tenant)
+        if not admitted:
+            self.counters["subs_rejected"] += 1
+            return SubscriptionHandle(sub_id=-1, tenant=tenant, status=REJECTED, reason=reason)
+        q: asyncio.Queue = asyncio.Queue(maxsize=self.cfg.max_deltas_buffered)
+        handle = SubscriptionHandle(sub_id=-1, tenant=tenant, status=OK, deltas=q)
+
+        def deliver(sid, delta):  # runs on the engine thread, per tick
+            loop.call_soon_threadsafe(self._deliver_delta, handle, delta)
+
+        # registration runs the full evaluation, so it can hit the same
+        # transient faults a query tick can — same bounded retry policy
+        attempt = 0
+        while True:
+            try:
+                sub_id = await loop.run_in_executor(
+                    self._engine_pool,
+                    lambda: self.server.subscribe(query, callback=deliver, tenant=tenant),
+                )
+                break
+            except Exception as exc:  # noqa: BLE001 — classified below
+                if getattr(exc, "transient", False) and attempt < self.cfg.max_retries:
+                    attempt += 1
+                    self.counters["retries"] += 1
+                    await asyncio.sleep(min(
+                        self.cfg.backoff_max_s,
+                        self.cfg.backoff_base_s * self.cfg.backoff_factor ** (attempt - 1),
+                    ))
+                    continue
+                self.admission.release_subscription(tenant)
+                handle.status = ERROR
+                handle.reason = f"register-failed: {type(exc).__name__}: {exc}"
+                handle.deltas = None
+                return handle
+        handle.sub_id = sub_id
+        self.subscriptions[sub_id] = handle
+        self.counters["subscribed"] += 1
+        # the initial snapshot is returned (not called back) by register;
+        # enqueue it here so consumers see epoch order from the start
+        self._deliver_delta(handle, self.server.match_deltas[sub_id][0])
+        return handle
+
+    async def unsubscribe(self, sub_id: int) -> bool:
+        handle = self.subscriptions.get(sub_id)
+        if handle is None or handle.status != OK:
+            return False
+        loop = asyncio.get_running_loop()
+        await loop.run_in_executor(self._engine_pool, self.server.unsubscribe, sub_id)
+        handle.status = "unsubscribed"
+        self.admission.release_subscription(handle.tenant)
+        return True
+
+    async def standing_matches(self, sub_id: int) -> list:
+        """The subscription's accumulated current match set (engine
+        thread — consistent with the latest subscription tick)."""
+        loop = asyncio.get_running_loop()
+        return await loop.run_in_executor(
+            self._engine_pool, self.server.standing_matches, sub_id
+        )
+
+    def _deliver_delta(self, handle: SubscriptionHandle, delta) -> None:
+        """Event-loop-thread delta delivery with shed/quarantine
+        semantics (scheduled via ``call_soon_threadsafe`` from ticks)."""
+        if handle.status != OK:
+            return  # already terminal; late deltas drop
+        if delta.error:
+            # the registry quarantined the subscription: deliver the
+            # terminal delta (best-effort) and close the handle
+            handle.status = ERROR
+            handle.reason = delta.error
+            self.counters["subs_quarantined"] += 1
+            self.admission.release_subscription(handle.tenant)
+            try:
+                handle.deltas.put_nowait(delta)
+            except asyncio.QueueFull:
+                pass
+            return
+        try:
+            handle.deltas.put_nowait(delta)
+            self.counters["deltas_delivered"] += 1
+        except asyncio.QueueFull:
+            # slow consumer: close the subscription instead of stalling
+            # the tick thread or buffering without bound
+            handle.status = SHED
+            handle.reason = "delta-queue-full"
+            self.counters["subs_shed"] += 1
+            self.admission.release_subscription(handle.tenant)
+            self._engine_pool.submit(self.server.unsubscribe, handle.sub_id)
 
     # ----------------------------------------------------------- queue ----
     def _rank(self, req: _Pending, now: float) -> float:
@@ -396,8 +538,14 @@ class MatchService:
             if self.server.update_queue:
                 # one coalesced apply_updates epoch on the engine thread;
                 # compaction is deferred, so the epoch cost is bounded by
-                # the touched set, not by re-pack work
+                # the touched set, not by re-pack work.  The subscription
+                # tick runs inside apply_update_tick, same thread.
                 await loop.run_in_executor(self._engine_pool, self.server.apply_update_tick)
+            elif self.server.standing_lagging():
+                # a subscription missed its tick (transient evaluation
+                # fault): the heartbeat retries until it catches up —
+                # the registry coalesces missed epochs into one exact diff
+                await loop.run_in_executor(self._engine_pool, self.server.poll_standing)
             self._schedule_compactions()
             batch = self._next_batch(time.monotonic())
             if batch:
