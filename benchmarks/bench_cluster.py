@@ -1,0 +1,159 @@
+"""Cluster tier: local-cluster scaling + sharded-cache locality
+(``BENCH_cluster.json``).
+
+Two phases over one ~16-partition engine:
+
+* **Scatter-gather scaling** — the same query batch served single-
+  process and through 1/2/4-host local clusters (dist/cluster.py:
+  cost-ranked placement, parts-scoped probes per host, coordinator
+  join).  Matches must be byte-identical everywhere
+  (``cluster_matches_identical``) and every placement must respect the
+  LPT Graham bound (``placement_balanced``).  Local hosts share one
+  process, so wall time measures the tier's coordination overhead, not
+  speedup — the scaling curve rides in the JSON ungated.
+
+* **Cache locality under a partitioned update stream** — a 4-host
+  cluster with the partition-owner-sharded result cache serves a
+  repeat-heavy stream while deletion epochs walk round-robin over
+  partitions, each confined to one partition's member region.
+  Deletions carry no inserted label hashes, so eager invalidation runs
+  only on the mutated partitions' owner shards; entries homed elsewhere
+  fall to the coordinator's lazy mutation-tick check at ``get``.
+  ``cache_locality_ok`` gates ``remote_evictions == 0`` (no eager
+  cross-shard eviction traffic) with ``local_evictions > 0``, and the
+  post-eviction hit rate is tracked (``cache_hit_rate``).
+
+CI gates the three booleans plus the coordination-overhead timing via
+benchmarks/compare.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import GraphUpdate
+from repro.dist.cluster import ClusterEngine
+
+from .common import build_engine, emit, make_graph, sample_queries
+
+HOST_COUNTS = (1, 2, 4)
+N_QUERIES = 10
+UPDATE_EPOCHS = 8
+EDGES_PER_EPOCH = 2
+
+
+def _interior_edges(g, members, k: int, skip: set) -> np.ndarray:
+    """Up to ``k`` not-yet-deleted edges with both endpoints inside one
+    partition's member set — a partition-local deletion batch."""
+    mset = set(int(v) for v in members)
+    out = []
+    for u, v in g.edge_array().tolist():
+        if u in mset and v in mset and (u, v) not in skip:
+            out.append((u, v))
+            if len(out) == k:
+                break
+    return np.array(out, np.int64).reshape(-1, 2)
+
+
+def run(full: bool = False, json_path: str | None = None) -> dict:
+    n = 10_000 if full else 4_000
+    g = make_graph(n=n, seed=23)
+    eng = build_engine(g, partition_size=250, probe_impl="stacked")
+    queries = sample_queries(g, n=N_QUERIES, seed0=700)
+
+    # ---- phase 1: scatter-gather scaling + identity -----------------------
+    t0 = time.perf_counter()
+    ref = eng.match_many(queries)
+    single_s = time.perf_counter() - t0
+    identical = True
+    balanced = True
+    scaling = {}
+    for n_hosts in HOST_COUNTS:
+        cl = ClusterEngine(eng, n_hosts=n_hosts)
+        got = cl.match_many(queries)  # warm subset stacks + counters
+        identical &= got == ref
+        t0 = time.perf_counter()
+        identical &= cl.match_many(queries) == ref
+        wall = time.perf_counter() - t0
+        place = cl.rebalance()  # probe counters now populated
+        balanced &= place.balanced()
+        scaling[n_hosts] = {
+            "match_s": wall,
+            "max_load": place.max_load(),
+            "load_bound": place.bound,
+            "requests_scattered": cl.stats["requests_scattered"],
+        }
+        emit(
+            f"cluster/match_h{n_hosts}",
+            1e6 * wall,
+            f"identical={got == ref} max_load={place.max_load():.3g}",
+        )
+
+    # ---- phase 2: sharded-cache locality under partitioned updates -------
+    cl = ClusterEngine(eng, n_hosts=4, cache_capacity=256)
+    cl.match_many(queries)  # fill every shard
+    deleted: set = set()
+    n_parts = len(eng.models)
+    t_serve = 0.0
+    for epoch in range(UPDATE_EPOCHS):
+        mi = epoch % n_parts
+        rem = _interior_edges(eng.graph, eng.models[mi].members, EDGES_PER_EPOCH, deleted)
+        if rem.size == 0:
+            continue
+        deleted.update((int(u), int(v)) for u, v in rem)
+        cl.apply_updates(GraphUpdate(remove_edges=rem))
+        t0 = time.perf_counter()
+        got = cl.match_many(queries)
+        t_serve += time.perf_counter() - t0
+        identical &= [sorted(m) for m in got] == [sorted(m) for m in eng.match_many(queries)]
+    loc = cl.cache.locality()
+    cache = cl.cache.stats_dict()
+    locality_ok = loc["remote_evictions"] == 0 and loc["local_evictions"] > 0
+    emit(
+        "cluster/cache_locality",
+        1e6 * t_serve,
+        f"local={loc['local_evictions']} remote={loc['remote_evictions']} "
+        f"hit_rate={cache['hit_rate']:.2f}",
+    )
+
+    rec = {
+        "n_vertices": int(g.n_vertices),
+        "n_partitions": n_parts,
+        "n_queries": len(queries),
+        "single_process_s": single_s,
+        "cluster_match_s": scaling[4]["match_s"],
+        "scaling": {str(k): v for k, v in scaling.items()},
+        "update_epochs": UPDATE_EPOCHS,
+        "cache_hit_rate": cache["hit_rate"],
+        "local_evictions": int(loc["local_evictions"]),
+        "remote_evictions": int(loc["remote_evictions"]),
+        "host_losses": int(cl.stats["host_losses"]),
+        "cluster_matches_identical": bool(identical),
+        "placement_balanced": bool(balanced),
+        "cache_locality_ok": bool(locality_ok),
+    }
+    json_path = json_path or os.environ.get("BENCH_JSON")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    rec = run(full=args.full, json_path=args.json)
+    print(
+        f"# cluster scatter-gather identical={rec['cluster_matches_identical']} "
+        f"balanced={rec['placement_balanced']} locality_ok={rec['cache_locality_ok']} "
+        f"(local={rec['local_evictions']} remote={rec['remote_evictions']}, "
+        f"hit_rate={rec['cache_hit_rate']:.2f})"
+    )

@@ -103,6 +103,21 @@ SPECS = {
         "higher_is_better": [],
         "bool_true": ["match_sets_identical", "speedup_ge_3x"],
     },
+    # multi-host cluster tier on a single-process local cluster: the
+    # scatter-gather identity (cluster == single-process match_many, byte
+    # level), LPT placement bound, and sharded-cache invalidation
+    # locality (deletion streams evict on owner shards only) are the
+    # headline gates; cluster_match_s tracks coordination overhead of a
+    # warm 4-host scatter and cache_hit_rate the post-eviction stream.
+    "BENCH_cluster.json": {
+        "lower_is_better": ["cluster_match_s"],
+        "higher_is_better": ["cache_hit_rate"],
+        "bool_true": [
+            "cluster_matches_identical",
+            "placement_balanced",
+            "cache_locality_ok",
+        ],
+    },
 }
 DEFAULT_FILES = list(SPECS)
 

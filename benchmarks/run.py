@@ -17,6 +17,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (
+        bench_cluster,
         bench_graph_scaling,
         bench_grouped,
         bench_join,
@@ -39,6 +40,7 @@ def main() -> None:
         ("updates", bench_updates.run),
         ("serving", bench_serving.run),
         ("standing", bench_standing.run),
+        ("cluster", bench_cluster.run),
         ("join", bench_join.run),
         ("fig8_pruning", bench_pruning.run),
         ("fig9_baselines", bench_vs_baselines.run),

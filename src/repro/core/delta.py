@@ -74,6 +74,7 @@ __all__ = [
     "probe_delta_multi",
     "l_hop_reach",
     "paths_touching",
+    "touch_hint",
 ]
 
 
@@ -171,6 +172,25 @@ def apply_graph_update(g: Graph, upd: GraphUpdate) -> tuple[Graph, np.ndarray]:
         )
     )
     return new_g, touched
+
+
+def touch_hint(upd: GraphUpdate) -> tuple[np.ndarray, bool]:
+    """Conservative superset of the vertices ``upd`` can touch, plus
+    whether it appends vertices.  ``apply_graph_update``'s true touched
+    set filters no-op edits; the hint never misses a touched vertex,
+    which is all the hot-vertex update coalescing rule (serve tier)
+    needs — overlap ⇒ the updates share re-embed work, disjoint hints ⇒
+    the updates commute (every edit names its endpoints in the hint)."""
+    verts = np.unique(
+        np.concatenate(
+            [
+                np.asarray(upd.add_edges, np.int64).reshape(-1),
+                np.asarray(upd.remove_edges, np.int64).reshape(-1),
+                np.asarray(upd.remove_vertices, np.int64).reshape(-1),
+            ]
+        )
+    )
+    return verts, bool(np.asarray(upd.add_vertex_labels).size)
 
 
 def l_hop_reach(g: Graph, seeds: np.ndarray, hops: int) -> np.ndarray:

@@ -196,6 +196,12 @@ class GnnPeEngine:
         # (touched vertices + per-partition FreshRows) — the standing-query
         # tier consumes this via epoch_fresh()/match_incremental
         self._last_epoch_update: dict | None = None
+        # cluster tier (§dist/cluster.py): per-partition probe-cost
+        # accumulators behind partition_stats(), plus host-scoped subset
+        # probes keyed by the owned-partition tuple a placement assigned
+        self._part_leaf_pairs = np.zeros(0, np.int64)
+        self._part_probe_rows = np.zeros(0, np.int64)
+        self._subset_probes: dict = {}
         self._result_cache = None
         if cfg.cache:
             from ..serve.cache import ResultCache  # lazy: avoids core↔serve cycle
@@ -352,6 +358,9 @@ class GnnPeEngine:
             "edge_cut": int(self.partitioning.edge_cut(g)),
         }
         self._stacked_probe = None  # indexes changed; restack lazily
+        self._subset_probes.clear()
+        self._part_leaf_pairs = np.zeros(len(self.models), np.int64)
+        self._part_probe_rows = np.zeros(len(self.models), np.int64)
         self.delta = DeltaIndex([m.index for m in self.models]) if self.models else None
         self._pending_compaction.clear()
         self.epoch = 0
@@ -392,6 +401,63 @@ class GnnPeEngine:
             )
             self.offline_stats.update(self._stacked_probe.stacked.padding_stats())
         return self._stacked_probe
+
+    def _subset_probe(self, parts: tuple):
+        """Host-scoped stacked probe over just ``parts`` (ascending model
+        indices) — the cluster tier's per-host traversal: a host stacks
+        and scans only the partitions placement assigned to it, so probe
+        work scales down with ownership instead of every host paying the
+        full descent.  Cached per parts tuple; dropped whenever any
+        partition's index object changes (compaction install, rebuild,
+        generation swap)."""
+        probe = self._subset_probes.get(parts)
+        if probe is None:
+            from ..dist.probe import StackedProbe  # lazy: avoids core↔dist cycle
+
+            probe = StackedProbe(
+                [self.models[mi].index for mi in parts],
+                leaf_pair_cap=self.cfg.stacked_leaf_pair_cap,
+            )
+            self._subset_probes[parts] = probe
+        return probe
+
+    def _ensure_part_counters(self) -> None:
+        n = len(self.models)
+        if self._part_leaf_pairs.size != n:
+            self._part_leaf_pairs = np.zeros(n, np.int64)
+            self._part_probe_rows = np.zeros(n, np.int64)
+
+    def partition_stats(self) -> list:
+        """Stable per-partition cost/size stats for the cluster tier's
+        placement model (dist/placement.py) — the supported surface over
+        what were internal counters.  One dict per partition model:
+
+          * ``part_id``     — partition id in the engine's Partitioning;
+          * ``rows``        — live main-index paths;
+          * ``nbytes``      — packed index bytes;
+          * ``leaf_pairs``  — cumulative (query, row) leaf pairs the
+            stacked probe scanned against this partition (0 until a
+            stacked probe ran — placement then falls back to rows);
+          * ``probe_rows``  — cumulative candidate rows this partition
+            served to joins (all probe impls, main + delta);
+          * ``delta_rows``/``tombstones`` — current delta pressure.
+        """
+        self._ensure_part_counters()
+        out = []
+        for mi, m in enumerate(self.models):
+            dp = self.delta.parts[mi] if self.delta is not None else None
+            out.append(
+                {
+                    "part_id": int(m.part_id),
+                    "rows": int(m.index.n_paths),
+                    "nbytes": int(m.index.nbytes()),
+                    "leaf_pairs": int(self._part_leaf_pairs[mi]),
+                    "probe_rows": int(self._part_probe_rows[mi]),
+                    "delta_rows": int(dp.n_rows) if dp is not None else 0,
+                    "tombstones": int(dp.n_tombstones) if dp is not None else 0,
+                }
+            )
+        return out
 
     def _content_fingerprint(self) -> bytes:
         """Digest identifying the current index/embedding content — the
@@ -691,6 +757,11 @@ class GnnPeEngine:
                     )
                     self._pending_compaction.discard(mi)
                     compacted.append(mi)
+        if compacted:
+            # host-scoped subset probes stack index objects directly —
+            # a compaction replaced some of them, so drop the lot (they
+            # re-stack lazily from their owners' next probe)
+            self._subset_probes.clear()
         # elastic re-stacking: only the compacted partitions' shard slots
         if self._stacked_probe is not None and compacted:
             for mi in compacted:
@@ -729,6 +800,57 @@ class GnnPeEngine:
             **delta.stats(),
         }
 
+    def _rebuild_partition(self, g, partitioning, model, members=None) -> dict:
+        """One partition's from-scratch re-embed + re-enumerate + re-pack
+        under its FROZEN GNNs — pure: reads only frozen model state
+        (params, fallback ids) and the passed graph/partitioning, and
+        returns the rebuilt artifacts without installing them.
+        ``rebuild_indexes`` installs inline; the blue-green generation
+        path (``prepare/build/install_generation``) runs this off the
+        serving path against a snapshot and installs under a version
+        check."""
+        cfg = self.cfg
+        members = model.members if members is None else members
+        vset = expanded_partition(g, partitioning, model.part_id, cfg.path_length)
+        stars = build_star_tensors(g, vset, cfg.theta)
+        fb = np.nonzero(np.isin(vset, model.fallback_vids))[0]
+        node_emb, node_emb0 = self._node_embeddings(g, vset, stars, model.params, fb)
+        node_emb_multi = np.zeros((cfg.n_multi, g.n_vertices, cfg.emb_dim), np.float32)
+        for i in range(cfg.n_multi):
+            stars_i = dataclasses.replace(
+                stars,
+                center_labels=self.label_perms[i][g.labels][vset].astype(np.int32),
+                leaf_labels=self._relabel_leaves(stars.leaf_labels, stars.leaf_mask, i),
+            )
+            fb_i = np.nonzero(np.isin(vset, model.fallback_vids_multi[i]))[0]
+            emb_i, _ = self._node_embeddings(g, vset, stars_i, model.multi_params[i], fb_i)
+            node_emb_multi[i] = emb_i
+        paths = enumerate_paths(g, members, cfg.path_length)
+        emb = concat_path_embeddings(paths, node_emb)
+        emb0 = concat_path_embeddings(paths, node_emb0)
+        emb_multi = (
+            np.stack(
+                [concat_path_embeddings(paths, node_emb_multi[i]) for i in range(cfg.n_multi)]
+            )
+            if cfg.n_multi
+            else None
+        )
+        index = build_index(
+            paths, emb, emb0, emb_multi,
+            block_size=cfg.block_size, fanout=cfg.index_fanout,
+            quantize=cfg.quantize_index,
+            path_labels=g.labels[paths] if cfg.quantize_index else None,
+        )
+        if cfg.index_kind == "grouped":
+            self._attach_partition_groups(index)
+        return {
+            "node_emb": node_emb,
+            "node_emb0": node_emb0,
+            "node_emb_multi": node_emb_multi,
+            "vertex_set": vset,
+            "index": index,
+        }
+
     def rebuild_indexes(self) -> "GnnPeEngine":
         """From-scratch re-embed + re-enumerate + re-pack of EVERY
         partition with the frozen per-partition GNNs.
@@ -740,52 +862,21 @@ class GnnPeEngine:
         """
         assert self.graph is not None, "call build() first"
         g = self.graph
-        cfg = self.cfg
         for mi, model in enumerate(self.models):
-            vset = expanded_partition(g, self.partitioning, model.part_id, cfg.path_length)
-            stars = build_star_tensors(g, vset, cfg.theta)
-            fb = np.nonzero(np.isin(vset, model.fallback_vids))[0]
-            node_emb, node_emb0 = self._node_embeddings(g, vset, stars, model.params, fb)
-            node_emb_multi = np.zeros((cfg.n_multi, g.n_vertices, cfg.emb_dim), np.float32)
-            for i in range(cfg.n_multi):
-                stars_i = dataclasses.replace(
-                    stars,
-                    center_labels=self.label_perms[i][g.labels][vset].astype(np.int32),
-                    leaf_labels=self._relabel_leaves(stars.leaf_labels, stars.leaf_mask, i),
-                )
-                fb_i = np.nonzero(np.isin(vset, model.fallback_vids_multi[i]))[0]
-                emb_i, _ = self._node_embeddings(g, vset, stars_i, model.multi_params[i], fb_i)
-                node_emb_multi[i] = emb_i
-            paths = enumerate_paths(g, model.members, cfg.path_length)
-            emb = concat_path_embeddings(paths, node_emb)
-            emb0 = concat_path_embeddings(paths, node_emb0)
-            emb_multi = (
-                np.stack(
-                    [concat_path_embeddings(paths, node_emb_multi[i]) for i in range(cfg.n_multi)]
-                )
-                if cfg.n_multi
-                else None
-            )
-            index = build_index(
-                paths, emb, emb0, emb_multi,
-                block_size=cfg.block_size, fanout=cfg.index_fanout,
-                quantize=cfg.quantize_index,
-                path_labels=g.labels[paths] if cfg.quantize_index else None,
-            )
-            if cfg.index_kind == "grouped":
-                self._attach_partition_groups(index)
-            model.node_emb = node_emb
-            model.node_emb0 = node_emb0
-            model.node_emb_multi = node_emb_multi
-            model.vertex_set = vset
-            model.index = index
+            out = self._rebuild_partition(g, self.partitioning, model)
+            model.node_emb = out["node_emb"]
+            model.node_emb0 = out["node_emb0"]
+            model.node_emb_multi = out["node_emb_multi"]
+            model.vertex_set = out["vertex_set"]
+            model.index = out["index"]
             if self.delta is not None:
-                self.delta.reset_part(mi, index)
+                self.delta.reset_part(mi, out["index"])
         self._pending_compaction.clear()
         self.offline_stats["n_paths"] = int(sum(m.index.n_paths for m in self.models))
         self.offline_stats["index_bytes"] = int(sum(m.index.nbytes() for m in self.models))
         self._stacked_probe = None
-        if cfg.probe_impl == "stacked" and self.models:
+        self._subset_probes.clear()
+        if self.cfg.probe_impl == "stacked" and self.models:
             self.stacked_probe()
         return self
 
@@ -845,6 +936,7 @@ class GnnPeEngine:
             return False
         self.models[snap.mi].index = new_index
         self._pending_compaction.discard(snap.mi)
+        self._subset_probes.clear()  # subset stacks reference the old index
         # the per-epoch liveness mask cached for the device join is keyed
         # on the epoch, which an install does NOT bump — drop it so the
         # next probe rebuilds it against the tombstone-free partition
@@ -854,6 +946,63 @@ class GnnPeEngine:
                 self.offline_stats.update(self._stacked_probe.stacked.padding_stats())
             else:
                 self._stacked_probe = None  # outgrew the slot; restack lazily
+        return True
+
+    # ------------------------------------------------------------------
+    # Blue-green index generations (§cluster tier): snapshot → build a
+    # full index generation OFF the serving path → version-checked atomic
+    # install.  Content equals rebuild_indexes at the snapshot epoch (the
+    # delta-vs-rebuild equivalence), so an install changes no match set
+    # and — like compaction — needs no fingerprint bump.
+    # ------------------------------------------------------------------
+    def prepare_generation(self) -> dict:
+        """Snapshot what a generation build needs (engine thread, cheap).
+        ``apply_updates`` replaces — never mutates — the graph and
+        partitioning objects, so holding refs is a true snapshot; members
+        copy because vertex-adding updates extend them in place."""
+        assert self.graph is not None, "call build() first"
+        return {
+            "generation": self.epoch + 1,
+            "epoch": self.epoch,
+            "graph": self.graph,
+            "partitioning": self.partitioning,
+            "members": [m.members.copy() for m in self.models],
+        }
+
+    def build_generation(self, snap: dict) -> list:
+        """The expensive full rebuild against the snapshot — pure, safe
+        on a background thread while the engine keeps serving probes (it
+        reads only frozen params/fallbacks and the snapshot's objects)."""
+        return [
+            self._rebuild_partition(snap["graph"], snap["partitioning"], model, members)
+            for model, members in zip(self.models, snap["members"])
+        ]
+
+    def install_generation(self, snap: dict, built: list) -> bool:
+        """Atomic blue-green swap (engine thread).  Returns False — and
+        leaves the serving generation untouched — when an update epoch
+        landed after the snapshot: the build saw a stale graph, so the
+        caller re-snapshots and rebuilds."""
+        if self.epoch != snap["epoch"] or len(built) != len(self.models):
+            return False
+        for mi, (model, out) in enumerate(zip(self.models, built)):
+            model.node_emb = out["node_emb"]
+            model.node_emb0 = out["node_emb0"]
+            model.node_emb_multi = out["node_emb_multi"]
+            model.vertex_set = out["vertex_set"]
+            model.index = out["index"]
+            if self.delta is not None:
+                self.delta.reset_part(mi, out["index"])
+        self._pending_compaction.clear()
+        self.offline_stats["n_paths"] = int(sum(m.index.n_paths for m in self.models))
+        self.offline_stats["index_bytes"] = int(sum(m.index.nbytes() for m in self.models))
+        # tombstones vanished without an epoch bump — the epoch-keyed
+        # device-join liveness cache would serve a stale mask
+        self._live_mask_cache = None
+        self._stacked_probe = None
+        self._subset_probes.clear()
+        if self.cfg.probe_impl == "stacked" and self.models:
+            self.stacked_probe()
         return True
 
     # ------------------------------------------------------------------
@@ -1310,6 +1459,7 @@ class GnnPeEngine:
         delta_memo: dict | None = None,
         dev_memo: dict | None = None,
         dev_counts: dict | None = None,
+        parts: list | None = None,
     ) -> None:
         """One fused index probe for many (query, path) pairs × partitions.
 
@@ -1335,6 +1485,14 @@ class GnnPeEngine:
         buffers are brute-scanned into ``delta_memo[(mi, qi, path)]`` —
         together the memos hold exactly the candidate rows a rebuilt
         index would return.
+
+        ``parts`` (cluster tier) restricts the probe to those model
+        indices: a host probes only the partitions placement assigned to
+        it — under ``probe_impl="stacked"`` via a host-scoped subset
+        stack (``_subset_probe``), never the device-assembly path (the
+        liveness mask and dev layout are full-stack-keyed).  Memo entries
+        for the covered partitions are identical to an unrestricted
+        probe's.
         """
         cfg = self.cfg
         cat, spans = q_embs
@@ -1370,21 +1528,36 @@ class GnnPeEngine:
             )
 
         impl = probe_impl or cfg.probe_impl
-        if impl == "stacked" and self.models:
+        self._ensure_part_counters()
+        part_list = (
+            sorted(int(mi) for mi in parts)
+            if parts is not None
+            else list(range(len(self.models)))
+        )
+        # device assembly needs the full stack (liveness mask + layout
+        # are keyed on it) — a parts-scoped probe takes the host path
+        use_dev = dev_memo is not None and parts is None
+        if impl == "stacked" and part_list:
             # one vmapped (and device-sharded) descent over EVERY partition
+            # — or, cluster-scoped, over just this host's owned ones
             L = self.models[0].index.paths.shape[1]
             if L in layouts:
-                probe = self.stacked_probe()
+                probe = (
+                    self.stacked_probe()
+                    if parts is None
+                    else self._subset_probe(tuple(part_list))
+                )
                 sel, gidx, qh = layouts[L]
                 B = len(sel)
-                m = len(self.models)
-                per_part = [query_tensors(mi, gidx, B) for mi in range(m)]
+                mis = part_list
+                per_part = [query_tensors(mi, gidx, B) for mi in mis]
                 q_emb = np.stack([t[0] for t in per_part])
                 q_emb0 = np.stack([t[1] for t in per_part])
                 q_multi = (
                     np.stack([t[2] for t in per_part], axis=1) if cfg.n_multi else None
                 )
-                if dev_memo is not None:
+                lp_before = probe.part_leaf_pairs.copy()
+                if use_dev:
                     # §device join: candidate vertices assemble on device,
                     # tombstones filter via the liveness mask — no host-side
                     # member expansion, no per-row result transfer
@@ -1400,10 +1573,11 @@ class GnnPeEngine:
                         per_b, part_counts = out
                     for b, (qi, p) in enumerate(sel):
                         dev_memo[(qi, p)] = per_b[b]
-                        for mi in range(m):
+                        for mi in mis:
                             dev_counts[(mi, qi, p)] = int(part_counts[mi, b])
                             if stats_memo is not None:
                                 stats_memo[(mi, qi, p)] = stats[mi][b]
+                    self._part_probe_rows += part_counts.sum(axis=1)
                 else:
                     out = probe.probe(
                         q_emb, q_emb0, q_multi, q_label_hash=qh,
@@ -1411,15 +1585,21 @@ class GnnPeEngine:
                         return_stats=stats_memo is not None,
                     )
                     results, stats = out if stats_memo is not None else (out, None)
-                    for mi in range(m):
+                    for li, mi in enumerate(mis):
                         for b, (qi, p) in enumerate(sel):
-                            memo[(mi, qi, p)] = self._live_rows(mi, results[mi][b])
+                            rows = self._live_rows(mi, results[li][b])
+                            memo[(mi, qi, p)] = rows
+                            self._part_probe_rows[mi] += rows.size
                             if stats_memo is not None:
-                                stats_memo[(mi, qi, p)] = stats[mi][b]
+                                stats_memo[(mi, qi, p)] = stats[li][b]
+                self._part_leaf_pairs[np.asarray(mis, np.int64)] += (
+                    probe.part_leaf_pairs - lp_before
+                )
         else:
             items = []
             sels = []
-            for mi, model in enumerate(self.models):
+            for mi in part_list:
+                model = self.models[mi]
                 if model.index.n_paths == 0:
                     continue
                 L = model.index.paths.shape[1]
@@ -1440,7 +1620,9 @@ class GnnPeEngine:
                 results, stats = out if stats_memo is not None else (out, None)
                 for ii, ((mi, sel), rows_list) in enumerate(zip(sels, results)):
                     for b, (qi, p) in enumerate(sel):
-                        memo[(mi, qi, p)] = self._live_rows(mi, rows_list[b])
+                        rows = self._live_rows(mi, rows_list[b])
+                        memo[(mi, qi, p)] = rows
+                        self._part_probe_rows[mi] += rows.size
                         if stats_memo is not None:
                             stats_memo[(mi, qi, p)] = stats[ii][b]
         # ---- delta buffers: brute (query, row) pairs, one fused scan ----
@@ -1455,7 +1637,7 @@ class GnnPeEngine:
         sel, gidx, qh = lay
         d_items = []
         d_mis = []
-        for mi in range(len(self.models)):
+        for mi in part_list:
             dp = self.delta.parts[mi]
             if dp.n_rows == 0:
                 continue
@@ -1468,6 +1650,59 @@ class GnnPeEngine:
         for mi, rows_list in zip(d_mis, d_results):
             for b, (qi, p) in enumerate(sel):
                 delta_memo[(mi, qi, p)] = rows_list[b]
+                self._part_probe_rows[mi] += rows_list[b].size
+
+    def probe_candidates(
+        self,
+        queries: list,
+        requests: list,
+        parts: list | None = None,
+        index_kind: str | None = None,
+        probe_impl: str | None = None,
+        return_stats: bool = False,
+    ):
+        """Cluster scatter primitive (dist/cluster.py): probe ``requests``
+        — (qi, path) pairs over ``queries`` — against the partitions in
+        ``parts`` (default all) and return the candidate VERTEX arrays
+
+            {(mi, qi, path): (main_verts, delta_verts)}
+
+        with one entry per covered partition that produced rows.  Main
+        rows are live (tombstone-filtered) in index order, delta rows in
+        delta-buffer order — exactly the arrays ``_match_many_core``
+        concatenates, so a coordinator assembling gathered responses in
+        ascending ``mi`` (main then delta per partition) reproduces the
+        single-process candidate tables byte for byte.  With
+        ``return_stats`` also returns ``{(mi, qi, path): stats}`` (the
+        grouped cost model's ``surviving_groups`` ride-along).
+        """
+        assert self.graph is not None, "call build() first"
+        kind = index_kind or self.cfg.index_kind
+        q_embs = self._query_node_embeddings_many(queries)
+        memo: dict = {}
+        delta_memo: dict = {}
+        stats_memo: dict | None = {} if return_stats else None
+        self._probe_batch(
+            list(requests), queries, q_embs, memo,
+            use_groups=kind == "grouped", stats_memo=stats_memo,
+            probe_impl=probe_impl, delta_memo=delta_memo, parts=parts,
+        )
+        out: dict = {}
+        empty: dict = {}
+        for (mi, qi, p), rows in memo.items():
+            L = len(p)
+            ev = empty.setdefault(L, np.zeros((0, L), np.int32))
+            main = self.models[mi].index.paths[rows] if rows.size else ev
+            out[(mi, qi, p)] = (main, ev)
+        for (mi, qi, p), drows in delta_memo.items():
+            L = len(p)
+            ev = empty.setdefault(L, np.zeros((0, L), np.int32))
+            dverts = self.delta.parts[mi].paths[drows] if drows.size else ev
+            main = out[(mi, qi, p)][0] if (mi, qi, p) in out else ev
+            out[(mi, qi, p)] = (main, dverts)
+        if return_stats:
+            return out, stats_memo
+        return out
 
     def match_many(
         self,

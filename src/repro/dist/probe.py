@@ -73,7 +73,11 @@ class StackedProbe:
     ):
         if leaf_pair_cap < 1:
             raise ValueError(f"leaf_pair_cap must be >= 1, got {leaf_pair_cap}")
-        self.devices = list(devices) if devices is not None else list(jax.devices())
+        # default to the LOCAL devices: under a multi-process
+        # jax.distributed bootstrap each host probes its own shard of
+        # the cluster — sharding over jax.devices() (global) would ask
+        # for cross-process SPMD this probe never issues
+        self.devices = list(devices) if devices is not None else list(jax.local_devices())
         self.leaf_pair_cap = int(leaf_pair_cap)
         n_dev = max(len(self.devices), 1)
         self.stacked = stacked if stacked is not None else build_stacked(indexes, n_shards=n_dev)
@@ -89,6 +93,11 @@ class StackedProbe:
         self._dev_leaf: dict | None = None
         self._leaf_fns: dict = {}
         self.host_expansions = 0
+        # per-partition scanned (query, row) leaf pairs, engine model
+        # order — the cluster tier's placement cost signal
+        # (GnnPeEngine.partition_stats / dist/placement.py).  Cumulative
+        # over the probe's lifetime, like PAIR_COUNTERS.
+        self.part_leaf_pairs = np.zeros(self.stacked.n_parts, np.int64)
         self._refresh_device()
 
     def _refresh_device(self) -> None:
@@ -280,6 +289,9 @@ class StackedProbe:
             counts = np.clip(st.n_paths[pi] - starts, 0, bs)
         total_pairs = int(counts.sum()) if counts.size else 0
         index_mod.PAIR_COUNTERS["leaf_pairs"] += total_pairs
+        if total_pairs:
+            slot_lp = np.bincount(pi, weights=counts, minlength=S).astype(np.int64)
+            self.part_leaf_pairs += slot_lp[st.slot_of]
         if return_stats and use_groups:
             member_rows = (
                 np.bincount(pi * Q + qi, weights=counts, minlength=S * Q).astype(np.int64)
@@ -597,6 +609,13 @@ class StackedProbe:
                 use_pallas, return_stats, live_mask,
             )
         index_mod.PAIR_COUNTERS["leaf_pairs"] += total
+        if total:
+            # cells only (not pairs) cross back to the host here — the
+            # same per-partition cost signal as the host path
+            slot_lp = np.bincount(
+                np.asarray(pi), weights=np.asarray(counts), minlength=S
+            ).astype(np.int64)
+            self.part_leaf_pairs += slot_lp[st.slot_of]
         if use_groups:
             # level-1 accounting matches the host probe: groups checked
             # per surviving (query, block) cell (gib cached in _leaf_tensors)

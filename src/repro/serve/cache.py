@@ -40,7 +40,13 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["ResultCache", "CacheStats", "canonical_matches", "remap_matches"]
+__all__ = [
+    "ResultCache",
+    "ShardedResultCache",
+    "CacheStats",
+    "canonical_matches",
+    "remap_matches",
+]
 
 
 def canonical_matches(matches: list, perm: np.ndarray, n_vertices: int) -> np.ndarray:
@@ -139,19 +145,25 @@ class ResultCache:
         self.stats.insertions += 1
 
     # ------------------------------------------------------------------
-    def invalidate(self, mutated: dict) -> int:
+    def invalidate(self, mutated: dict, eager_rule1: bool = True) -> int:
         """Evict entries an update batch could have staled.
 
         ``mutated``: partition (model) index → ``{"deleted": bool,
         "inserted_hashes": iterable of int label-sequence hashes}`` for
         every partition the update touched.  Returns the eviction count.
+
+        ``eager_rule1=False`` runs only rule 2 (the label-hash collision
+        check) — the sharded cluster cache sends non-owner shards that
+        reduced form and catches rule 1 lazily at ``get`` instead (see
+        ``ShardedResultCache``).
         """
         if not mutated or not self._entries:
             return 0
         victims = set()
         inserted: set = set()
         for mi, info in mutated.items():
-            victims |= self._by_part.get(int(mi), set())
+            if eager_rule1:
+                victims |= self._by_part.get(int(mi), set())
             hashes = info.get("inserted_hashes")
             if hashes is not None:
                 inserted.update(int(h) for h in np.asarray(hashes).reshape(-1))
@@ -184,3 +196,183 @@ class ResultCache:
                 keys.discard(key)
                 if not keys:
                     del self._by_part[p]
+
+
+class ShardedResultCache:
+    """Partition-owner-sharded ``ResultCache`` (the cluster tier).
+
+    One ``ResultCache`` shard per host.  An entry is homed on the shard
+    of the host that owns its smallest contributing partition — for the
+    common partition-local workload (every candidate from one host's
+    partitions) that IS the host holding the entry's data.
+
+    Invalidation stays owner-local by construction: an update mutating
+    partitions ``M`` eagerly invalidates (rule 1 + rule 2) only the
+    shards of hosts owning some partition in ``M``.  Entries on *other*
+    shards that contributed a mutated partition are not chased with
+    cross-host eviction traffic — each ``invalidate`` bumps a per-
+    partition mutation tick (O(n_partitions) replicated metadata), and
+    ``get`` drops an entry lazily when any contributing partition
+    mutated after the entry was inserted.  Rule 2 (a non-contributing
+    partition gaining delta paths whose label hash collides with the
+    entry's plan) is the one case lazy ticks cannot cover, so it alone
+    is broadcast — and only when the update inserted paths at all.
+    The eviction split is accounted:
+
+      * ``local_evictions``  — eager evictions on a mutated partition's
+        owner shard (the invalidation the cluster keeps host-local);
+      * ``remote_evictions`` — rule-2 hash-collision evictions on
+        non-owner shards (the only eager cross-host evictions left);
+      * ``lazy_evictions``   — stale entries dropped at ``get`` by the
+        coordinator's tick check (read-side work, never cross-host).
+
+    Collision-free update streams therefore evict with
+    ``remote_evictions == 0`` — asserted in tests/test_cluster.py and
+    gated in benchmarks/bench_cluster.py.  The key→shard directory is
+    maintained on put and lazily pruned on get (shards drop entries
+    internally via LRU/invalidation).
+    """
+
+    def __init__(self, n_shards: int, capacity: int = 2048):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.shards = [ResultCache(capacity) for _ in range(n_shards)]
+        self._home: dict[bytes, int] = {}  # key -> homed shard id
+        self._tick_of: dict[bytes, int] = {}  # key -> tick at insertion
+        self.host_of = np.zeros(0, np.int64)  # model index -> owning host
+        self.last_mutated = np.zeros(0, np.int64)  # model index -> mutation tick
+        self._tick = 0
+        self.stats = CacheStats()  # cluster-level hit/miss accounting
+        self.local_evictions = 0
+        self.remote_evictions = 0
+        self.lazy_evictions = 0
+
+    def __len__(self) -> int:
+        return sum(len(s) for s in self.shards)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def set_placement(self, host_of) -> None:
+        """Install the partition→host ownership map (model index order).
+        Existing entries keep serving from their old shard — the
+        directory finds them — and re-home on their next put."""
+        self.host_of = np.asarray(host_of, np.int64)
+
+    def home_shard(self, contributing) -> int:
+        """The shard an entry with these contributing partitions homes
+        on: owner of the smallest contributing model index (0 when
+        nothing contributed or no placement is installed)."""
+        cont = [int(mi) for mi in contributing if int(mi) < self.host_of.size]
+        if not cont:
+            return 0
+        return int(self.host_of[min(cont)]) % len(self.shards)
+
+    # ------------------------------------------------------------------
+    def get(self, key: bytes, record: bool = True):
+        sid = self._home.get(key)
+        if sid is None:
+            if record:
+                self.stats.misses += 1
+            return None
+        ent = self.shards[sid].get(key, record=False)
+        if ent is None:  # shard dropped it (LRU/invalidation); prune lazily
+            del self._home[key]
+            self._tick_of.pop(key, None)
+            if record:
+                self.stats.misses += 1
+            return None
+        t0 = self._tick_of.get(key, 0)
+        for mi in ent.contributing:
+            # rule 1, evaluated lazily: a contributing partition mutated
+            # after this entry was cached (eager eviction ran only on the
+            # mutated partitions' owner shards)
+            if mi < self.last_mutated.size and self.last_mutated[mi] > t0:
+                self.shards[sid]._drop(key)
+                del self._home[key]
+                self._tick_of.pop(key, None)
+                self.lazy_evictions += 1
+                if record:
+                    self.stats.misses += 1
+                return None
+        if record:
+            self.stats.hits += 1
+        return ent
+
+    def put(self, key: bytes, matches, contributing, plan_hashes, epoch, plan=None) -> int:
+        """Insert on the entry's home shard; returns the shard id."""
+        sid = self.home_shard(contributing)
+        old = self._home.get(key)
+        if old is not None and old != sid:
+            self.shards[old]._drop(key)
+        self.shards[sid].put(key, matches, contributing, plan_hashes, epoch, plan=plan)
+        self._home[key] = sid
+        self._tick_of[key] = self._tick
+        self.stats.insertions += 1
+        return sid
+
+    # ------------------------------------------------------------------
+    def invalidate(self, mutated: dict) -> int:
+        """Eagerly invalidate only the mutated partitions' owner shards;
+        bump mutation ticks so other shards' stale entries fall to the
+        lazy ``get`` check (see class doc)."""
+        if not mutated:
+            return 0
+        self._tick += 1
+        hi = max(int(mi) for mi in mutated)
+        if hi >= self.last_mutated.size:
+            grown = np.zeros(hi + 1, np.int64)
+            grown[: self.last_mutated.size] = self.last_mutated
+            self.last_mutated = grown
+        for mi in mutated:
+            self.last_mutated[int(mi)] = self._tick
+        owners = {
+            int(self.host_of[int(mi)]) % len(self.shards)
+            for mi in mutated
+            if int(mi) < self.host_of.size
+        }
+        inserted = any(
+            info.get("inserted_hashes") is not None
+            and np.asarray(info["inserted_hashes"]).size
+            for info in mutated.values()
+        )
+        total = 0
+        for sid, shard in enumerate(self.shards):
+            if sid in owners:
+                n = shard.invalidate(mutated)
+                if n:
+                    self.local_evictions += n
+            elif inserted:
+                n = shard.invalidate(mutated, eager_rule1=False)
+                if n:
+                    self.remote_evictions += n
+            else:
+                n = 0
+            total += n
+        self.stats.invalidated += total
+        return total
+
+    def clear(self) -> None:
+        for s in self.shards:
+            s.clear()
+        self._home.clear()
+        self._tick_of.clear()
+
+    # ------------------------------------------------------------------
+    def locality(self) -> dict:
+        """The invalidation-locality split the cluster bench gates on."""
+        total = self.local_evictions + self.remote_evictions
+        return {
+            "local_evictions": self.local_evictions,
+            "remote_evictions": self.remote_evictions,
+            "lazy_evictions": self.lazy_evictions,
+            "local_fraction": self.local_evictions / total if total else 1.0,
+        }
+
+    def stats_dict(self) -> dict:
+        return {
+            **self.stats.as_dict(),
+            **self.locality(),
+            "shard_sizes": [len(s) for s in self.shards],
+        }

@@ -73,6 +73,16 @@ class MatchServeConfig:
     schedule: str = "fifo"
     # graph updates coalesced into one apply_updates epoch per tick
     max_updates_per_tick: int = 4
+    # hot-vertex coalescing: pull queued updates beyond the tick cap
+    # into the same epoch when they touch a vertex the tick already
+    # re-embeds — repeated touches of one star cost one re-embed, not
+    # one per queued update.  Pulling reorders past skipped updates, so
+    # a pull requires (a) no vertex appends (later updates may address
+    # the appended ids) and (b) a touch hint disjoint from every skipped
+    # update's hint (disjoint edits commute; core/delta.py touch_hint)
+    coalesce_hot: bool = False
+    # how deep past the tick cap the coalescing scan looks
+    coalesce_scan: int = 32
     # backpressure: queued requests/updates beyond these caps raise
     # QueueFull at submit time (0 = unbounded, the historical behavior)
     max_queue: int = 0
@@ -109,6 +119,7 @@ class MatchServer:
         self.update_queue: list = []  # pending GraphUpdate batches
         self.update_s: list = []  # per-tick apply_updates wall time
         self.n_updates_applied = 0
+        self.coalesced_pulls = 0  # updates pulled into earlier epochs (coalesce_hot)
         self.update_summaries: list = []  # apply_updates summaries, in order
         self.tick_stats: list = []  # per query tick: batch size, wall, cost span
         # standing queries: registry built lazily on first subscribe();
@@ -211,6 +222,8 @@ class MatchServer:
             return 0
         n_upd = self.cfg.max_updates_per_tick
         batch_u, self.update_queue = self.update_queue[:n_upd], self.update_queue[n_upd:]
+        if self.cfg.coalesce_hot and self.update_queue:
+            self._pull_hot_updates(batch_u)
         t_u = time.perf_counter()
         self.update_summaries.append(
             self.engine.apply_updates(batch_u, compaction=self.cfg.compaction)
@@ -219,6 +232,47 @@ class MatchServer:
         self.update_s.append(time.perf_counter() - t_u)
         self.n_updates_applied += len(batch_u)
         return len(batch_u)
+
+    def _pull_hot_updates(self, batch_u: list) -> int:
+        """Hot-vertex coalescing (``cfg.coalesce_hot``): extend this
+        tick's update batch with queued updates that touch a vertex the
+        tick already re-embeds.  Safety of the reorder (a pulled update
+        jumps every skipped one): only pull updates that append no
+        vertices and whose touch hint is disjoint from every skipped
+        update's hint — disjoint edits commute — and stop the scan at
+        the first skipped vertex-appending update, since updates behind
+        it may address the ids it appends.  Post-epoch matches are
+        identical either way (asserted in tests/test_cluster.py);
+        ``coalesced_pulls`` counts the saved epochs."""
+        from ..core.delta import touch_hint
+
+        hot: set = set()
+        for u in batch_u:
+            verts, _ = touch_hint(u)
+            hot.update(int(v) for v in verts)
+        skipped_hint: set = set()
+        keep: list = []
+        pulled = 0
+        queue = self.update_queue
+        for i, u in enumerate(queue):
+            if i >= self.cfg.coalesce_scan:
+                keep.extend(queue[i:])
+                break
+            verts, adds = touch_hint(u)
+            vs = {int(v) for v in verts}
+            if not adds and vs and (vs & hot) and not (vs & skipped_hint):
+                batch_u.append(u)
+                hot |= vs
+                pulled += 1
+                continue
+            if adds:
+                keep.extend(queue[i:])
+                break
+            keep.append(u)
+            skipped_hint |= vs
+        self.update_queue = keep
+        self.coalesced_pulls += pulled
+        return pulled
 
     def execute_batch(self, queries: list, isolate: bool = False):
         """One fused tick over ``queries`` with this server's overrides,
