@@ -118,6 +118,19 @@ SPECS = {
             "cache_locality_ok",
         ],
     },
+    # observability layer overhead: instrumented serving (metrics on,
+    # traces sampled at the production rate) vs obs.disable() on the
+    # same tick-loop stream over identical engine replicas.  The ≤5%
+    # ceiling gates as a bench-computed boolean (a median-of-repeats
+    # ratio — absolute walls stay unbanded because the ratio is the
+    # contract and CI hosts vary); export_parse_ok proves the post-run
+    # registry snapshot survives the Prometheus round trip with the
+    # funnel ordering intact (leaf ≥ candidates ≥ matches > 0).
+    "BENCH_obs.json": {
+        "lower_is_better": [],
+        "higher_is_better": [],
+        "bool_true": ["overhead_under_5pct", "export_parse_ok"],
+    },
 }
 DEFAULT_FILES = list(SPECS)
 

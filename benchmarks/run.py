@@ -21,6 +21,7 @@ def main() -> None:
         bench_graph_scaling,
         bench_grouped,
         bench_join,
+        bench_obs,
         bench_offline,
         bench_online_batch,
         bench_params,
@@ -42,6 +43,7 @@ def main() -> None:
         ("standing", bench_standing.run),
         ("cluster", bench_cluster.run),
         ("join", bench_join.run),
+        ("obs", bench_obs.run),
         ("fig8_pruning", bench_pruning.run),
         ("fig9_baselines", bench_vs_baselines.run),
         ("fig7_params", bench_params.run),

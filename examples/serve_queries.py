@@ -48,9 +48,41 @@ import numpy as np
 
 from repro.core import GnnPeConfig, GnnPeEngine, GraphUpdate, vf2_match
 from repro.graphs import newman_watts_strogatz, random_connected_query
+from repro.obs import parse_prometheus, to_prometheus, write_json_snapshot
 from repro.serve.faults import FaultSpec, FlakyEngine
 from repro.serve.match_server import MatchServeConfig, MatchServer
 from repro.serve.service import MatchService, ServiceConfig
+
+#: terminal request states the service accounts every submit into
+_STATUSES = ("ok", "rejected", "shed", "expired", "error", "retry-exhausted")
+
+
+def _metrics_report(n_submitted: int, service: bool, json_path: str | None) -> None:
+    """``--metrics``: export the registry and prove, from the exported
+    text alone, that zero requests were lost — every submitted request
+    is accounted in exactly one terminal-status counter."""
+    text = to_prometheus()
+    parsed = parse_prometheus(text)  # raises on any malformed line
+    if service:
+        def _count(s):
+            return int(parsed.get('gnnpe_service_request_seconds_count{status="%s"}' % s, 0))
+
+        total = sum(_count(s) for s in _STATUSES)
+        detail = " ".join(f"{s}={_count(s)}" for s in _STATUSES)
+    else:
+        total = int(parsed.get("gnnpe_server_queries_total", 0))
+        detail = f"ticks={int(parsed.get('gnnpe_server_tick_seconds_count', 0))}"
+    assert total == n_submitted, (
+        f"metrics accounting hole: {total} requests in terminal counters "
+        f"vs {n_submitted} submitted"
+    )
+    if json_path:
+        write_json_snapshot(json_path)
+    print(
+        f"[metrics] {len(parsed)} series exported, parse ok | "
+        f"{total}/{n_submitted} requests accounted ({detail})"
+        + (f" | snapshot → {json_path}" if json_path else "")
+    )
 
 
 async def _run_service(engine, args, rng):
@@ -173,6 +205,8 @@ async def _run_service(engine, args, rng):
             f"p95={tms[min(int(len(tms)*0.95), len(tms)-1)]:.1f}ms | "
             f"{n_err} per-tick error entries"
         )
+    if args.metrics:
+        _metrics_report(len(resps), service=True, json_path=args.metrics_json)
 
 
 def main():
@@ -229,6 +263,17 @@ def main():
     ap.add_argument(
         "--deadline", type=float, default=30.0,
         help="with --service: per-request deadline in seconds",
+    )
+    ap.add_argument(
+        "--metrics", action="store_true",
+        help="export the obs registry at the end of the run (Prometheus "
+        "text) and assert, from the exported counters alone, that every "
+        "submitted request reached exactly one terminal state",
+    )
+    ap.add_argument(
+        "--metrics-json", default=None,
+        help="with --metrics: also write the registry snapshot as JSON "
+        "to this path",
     )
     args = ap.parse_args()
 
@@ -347,6 +392,8 @@ def main():
             f"[serve] result cache: {cs.hits} hits / {cs.misses} misses "
             f"(hit rate {cs.hit_rate():.0%}), {cs.invalidated} invalidated"
         )
+    if args.metrics:
+        _metrics_report(len(sent), service=False, json_path=args.metrics_json)
 
 
 if __name__ == "__main__":

@@ -53,7 +53,7 @@ import numpy as np
 from ..graphs import Graph, from_edge_list
 from .grouping import attach_groups
 from .index import (
-    PAIR_COUNTERS,
+    _LEAF_PAIRS,
     PackedIndex,
     _gather_pair_operands,
     _pairs_keep_mask,
@@ -583,7 +583,7 @@ def probe_delta_multi(
             continue
         q_ids = np.repeat(np.arange(Q, dtype=np.int64), B)
         rows = np.tile(np.arange(B, dtype=np.int64), Q)
-        PAIR_COUNTERS["leaf_pairs"] += int(rows.size)
+        _LEAF_PAIRS.inc(int(rows.size))
         rows, q_ids = _prefilter_pairs(delta, rows, q_ids, q_emb, q_multi, q_label_hash)
         pack = {"Q": Q, "empty": False, "rows": rows, "q_ids": q_ids}
         if use_pallas:

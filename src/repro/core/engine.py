@@ -43,6 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graphs import Graph, Partitioning, expanded_partition, partition_graph
+from ..obs import trace as obs_trace
+from ..obs.metrics import REGISTRY as _OBS
 from .delta import (
     DeltaIndex,
     apply_graph_update,
@@ -52,6 +54,7 @@ from .delta import (
 )
 from .encoder import EncoderConfig, make_encoder
 from .grouping import attach_groups
+from . import index as index_mod
 from .index import (
     PackedIndex,
     build_index,
@@ -70,6 +73,29 @@ __all__ = ["GnnPeConfig", "PartitionModel", "GnnPeEngine", "QueryStats"]
 # plan-cache bound: one QueryPlan per canonical query signature; FIFO
 # eviction keeps a long-lived MatchServer from growing without limit
 _PLAN_CACHE_MAX = 4096
+
+# engine-level registry metrics (repro.obs): batch latency, per-stage
+# seconds, result-cache lookup outcomes, and the pruning funnel — the
+# process-wide cumulative complement to the per-query trace funnel
+_M_QUERIES = _OBS.counter("gnnpe_engine_queries_total", "Queries matched via match_many")
+_M_BATCH_S = _OBS.histogram(
+    "gnnpe_engine_match_batch_seconds", "Wall seconds per match_many call"
+)
+_M_STAGE_S = _OBS.histogram(
+    "gnnpe_engine_stage_seconds",
+    "Wall seconds per fused pipeline stage",
+    labels=("stage",),
+)
+_M_RCACHE = _OBS.counter(
+    "gnnpe_result_cache_lookups_total",
+    "Result-cache lookups by outcome",
+    labels=("result",),
+)
+_M_FUNNEL = _OBS.counter(
+    "gnnpe_funnel_total",
+    "Cumulative pruning-funnel counts (candidates surviving each level)",
+    labels=("stage",),
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1746,9 +1772,12 @@ class GnnPeEngine:
         nq = len(queries)
         if nq == 0:
             return ([], []) if return_stats else []
+        t_start = time.perf_counter()
         cache = self._result_cache
         if cache is None:
             results, stats, _ = self._match_many_core(queries, kind, impl, jimpl)
+            _M_QUERIES.inc(nq)
+            _M_BATCH_S.observe(time.perf_counter() - t_start)
             return (results, stats) if return_stats else results
         from ..serve.cache import canonical_matches, remap_matches
 
@@ -1756,50 +1785,60 @@ class GnnPeEngine:
         results: list = [None] * nq
         stats: list = [None] * nq
         miss: list[int] = []
-        for qi, (perm, key) in enumerate(canon):
-            ent = cache.get(key)
-            if ent is not None:
-                results[qi] = remap_matches(ent.matches, perm)
-                st = QueryStats()
-                st.cache_hit = True
-                st.n_matches = len(results[qi])
-                if ent.plan is not None:  # canonical ids → this query's ids
-                    st.plan = QueryPlan(
-                        paths=[tuple(int(perm[v]) for v in p) for p in ent.plan.paths],
-                        cost=ent.plan.cost,
-                        strategy=ent.plan.strategy,
-                    )
-                stats[qi] = st
-            else:
-                miss.append(qi)
+        with obs_trace.span("cache_lookup") as lk_span:
+            for qi, (perm, key) in enumerate(canon):
+                ent = cache.get(key)
+                if ent is not None:
+                    results[qi] = remap_matches(ent.matches, perm)
+                    st = QueryStats()
+                    st.cache_hit = True
+                    st.n_matches = len(results[qi])
+                    if ent.plan is not None:  # canonical ids → this query's ids
+                        st.plan = QueryPlan(
+                            paths=[tuple(int(perm[v]) for v in p) for p in ent.plan.paths],
+                            cost=ent.plan.cost,
+                            strategy=ent.plan.strategy,
+                        )
+                    stats[qi] = st
+                else:
+                    miss.append(qi)
+            if lk_span is not None:
+                lk_span.attrs["hits"] = nq - len(miss)
+                lk_span.attrs["misses"] = len(miss)
+        if nq - len(miss):
+            _M_RCACHE.labels(result="hit").inc(nq - len(miss))
         if miss:
+            _M_RCACHE.labels(result="miss").inc(len(miss))
             sub_results, sub_stats, contributing = self._match_many_core(
                 [queries[qi] for qi in miss], kind, impl, jimpl
             )
-            for k, qi in enumerate(miss):
-                results[qi] = sub_results[k]
-                stats[qi] = sub_stats[k]
-                q = queries[qi]
-                perm, key = canon[qi]
-                plan = sub_stats[k].plan
-                plan_hashes = {
-                    int(hash_labels(q.labels[np.asarray(p, np.int64)][None, :])[0])
-                    for p in plan.paths
-                }
-                inv = np.empty(q.n_vertices, np.int64)
-                inv[perm] = np.arange(q.n_vertices)
-                cache.put(
-                    key,
-                    canonical_matches(sub_results[k], perm, q.n_vertices),
-                    contributing[k],
-                    plan_hashes,
-                    self.epoch,
-                    plan=QueryPlan(
-                        paths=[tuple(int(inv[v]) for v in p) for p in plan.paths],
-                        cost=plan.cost,
-                        strategy=plan.strategy,
-                    ),
-                )
+            with obs_trace.span("cache_store", n_entries=len(miss)):
+                for k, qi in enumerate(miss):
+                    results[qi] = sub_results[k]
+                    stats[qi] = sub_stats[k]
+                    q = queries[qi]
+                    perm, key = canon[qi]
+                    plan = sub_stats[k].plan
+                    plan_hashes = {
+                        int(hash_labels(q.labels[np.asarray(p, np.int64)][None, :])[0])
+                        for p in plan.paths
+                    }
+                    inv = np.empty(q.n_vertices, np.int64)
+                    inv[perm] = np.arange(q.n_vertices)
+                    cache.put(
+                        key,
+                        canonical_matches(sub_results[k], perm, q.n_vertices),
+                        contributing[k],
+                        plan_hashes,
+                        self.epoch,
+                        plan=QueryPlan(
+                            paths=[tuple(int(inv[v]) for v in p) for p in plan.paths],
+                            cost=plan.cost,
+                            strategy=plan.strategy,
+                        ),
+                    )
+        _M_QUERIES.inc(nq)
+        _M_BATCH_S.observe(time.perf_counter() - t_start)
         return (results, stats) if return_stats else results
 
     def _match_many_core(self, queries: list, kind: str, impl: str, join_impl: str = "numpy"):
@@ -1818,8 +1857,13 @@ class GnnPeEngine:
         use_groups = kind == "grouped"
         nq = len(queries)
         stats = [QueryStats() for _ in range(nq)]
+        trace = obs_trace.current_trace()
+        pairs_before = (index_mod._GROUP_PAIRS.value, index_mod._LEAF_PAIRS.value)
         t0 = time.perf_counter()
-        q_embs = self._query_node_embeddings_many(queries)
+        with obs_trace.span("embed", n_queries=nq):
+            q_embs = self._query_node_embeddings_many(queries)
+        t_embed = time.perf_counter()
+        _M_STAGE_S.labels(stage="embed").observe(t_embed - t0)
         memo: dict = {}
         delta_memo: dict = {}
         delta = self.delta
@@ -1828,9 +1872,12 @@ class GnnPeEngine:
         dev_memo: dict | None = {} if device_assembly else None
         dev_counts: dict = {}
         # ---- plans (dr probes ride the same batched pipeline) -----------
+        plan_span_cm = obs_trace.span("plan", n_queries=nq)
+        plan_span = plan_span_cm.__enter__()
         weight_fns: list = [None] * nq
         cached_plans: list = [None] * nq
         plan_group_size = 1
+        stats_memo: dict | None = None
         if cfg.plan_weight == "dr":
             if use_groups:
                 plan_group_size = cfg.group_size
@@ -1841,7 +1888,7 @@ class GnnPeEngine:
                 if cached_plans[qi] is None
                 for p in candidate_plan_paths(q, cfg.path_length)
             ]
-            stats_memo: dict | None = {} if use_groups else None
+            stats_memo = {} if use_groups else None
             if probe_reqs:
                 self._probe_batch(
                     probe_reqs, queries, q_embs, memo,
@@ -1910,6 +1957,13 @@ class GnnPeEngine:
             else self._plan_cached(q, weight_fn=weight_fns[qi], group_size=plan_group_size)
             for qi, q in enumerate(queries)
         ]
+        if plan_span is not None:
+            plan_span.attrs["plan_cache_hits"] = sum(
+                1 for p in cached_plans if p is not None
+            )
+        plan_span_cm.__exit__(None, None, None)
+        t_plan = time.perf_counter()
+        _M_STAGE_S.labels(stage="plan").observe(t_plan - t_embed)
         # ---- retrieval: one fused probe per partition for all plans -----
         todo = [
             (qi, p)
@@ -1923,13 +1977,60 @@ class GnnPeEngine:
                 )
             )
         ]
-        if todo:
-            self._probe_batch(
-                todo, queries, q_embs, memo, use_groups=use_groups, probe_impl=impl,
-                delta_memo=delta_memo, dev_memo=dev_memo, dev_counts=dev_counts,
-            )
+        # capture grouped traversal stats for the trace funnel (the
+        # surviving-groups rung) — only when someone is actually tracing
+        probe_stats: dict | None = (
+            {} if (trace is not None and use_groups) else None
+        )
+        with obs_trace.span("probe", n_requests=len(todo)):
+            if todo:
+                self._probe_batch(
+                    todo, queries, q_embs, memo, use_groups=use_groups, probe_impl=impl,
+                    stats_memo=probe_stats,
+                    delta_memo=delta_memo, dev_memo=dev_memo, dev_counts=dev_counts,
+                )
+            if trace is not None:
+                # one child span per partition — the probe itself is fused
+                # across partitions, so these carry the per-partition row
+                # attribution (main vs delta) rather than separable time
+                main_rows = [0] * n_models
+                delta_rows = [0] * n_models
+                for (mi, _qi, _p), rows in memo.items():
+                    main_rows[mi] += int(rows.size)
+                for (mi, _qi, _p), cnt in dev_counts.items():
+                    main_rows[mi] += int(cnt)
+                for (mi, _qi, _p), rows in delta_memo.items():
+                    delta_rows[mi] += int(rows.size)
+                for mi in range(n_models):
+                    with obs_trace.span(
+                        "partition",
+                        part=mi,
+                        main_rows=main_rows[mi],
+                        delta_rows=delta_rows[mi],
+                    ):
+                        pass
         filter_time = time.perf_counter() - t0
+        _M_STAGE_S.labels(stage="probe").observe(time.perf_counter() - t_plan)
+        g_after = index_mod._GROUP_PAIRS.value
+        l_after = index_mod._LEAF_PAIRS.value
+        _M_FUNNEL.labels(stage="group_pairs").inc(g_after - pairs_before[0])
+        _M_FUNNEL.labels(stage="leaf_pairs").inc(l_after - pairs_before[1])
+        if trace is not None:
+            trace.add_funnel(
+                group_pairs=g_after - pairs_before[0],
+                leaf_pairs=l_after - pairs_before[1],
+            )
+            surv = 0
+            for sm in (probe_stats, stats_memo if cfg.plan_weight == "dr" else None):
+                if sm:
+                    surv += sum(int(e.get("surviving_groups", 0)) for e in sm.values())
+            if use_groups:
+                trace.add_funnel(surviving_groups=surv)
+                _M_FUNNEL.labels(stage="surviving_groups").inc(surv)
         # ---- per-query candidate assembly -------------------------------
+        t_asm = time.perf_counter()
+        asm_span_cm = obs_trace.span("assemble")
+        asm_span = asm_span_cm.__enter__()
         contributing: list[set] = [set() for _ in range(nq)]
         per_query_cands: list = []
         for qi, (q, plan) in enumerate(zip(queries, plans)):
@@ -1982,10 +2083,21 @@ class GnnPeEngine:
             st.total_paths = total_paths * max(len(plan.paths), 1)
             st.candidate_paths = cand_total
             st.pruning_power = 1.0 - cand_total / max(st.total_paths, 1)
+        batch_cands = sum(st.candidate_paths for st in stats)
+        if asm_span is not None:
+            asm_span.attrs["candidates"] = batch_cands
+        asm_span_cm.__exit__(None, None, None)
+        _M_STAGE_S.labels(stage="assemble").observe(time.perf_counter() - t_asm)
+        _M_FUNNEL.labels(stage="candidates").inc(batch_cands)
+        if trace is not None:
+            trace.add_funnel(candidates=batch_cands)
         # ---- join + refine ----------------------------------------------
         # per-path candidates are duplicate-free (partitions are root-
         # disjoint; delta rows are disjoint from live main rows), so the
         # join may skip its dedup sorts (assume_unique)
+        t_join0 = time.perf_counter()
+        join_span_cm = obs_trace.span("join", impl=join_impl, n_queries=nq)
+        join_span = join_span_cm.__enter__()
         if join_impl == "device":
             # one vmapped device program per join step for every group of
             # same-plan queries — the tick-level batched join
@@ -2009,6 +2121,14 @@ class GnnPeEngine:
                 stats[qi].join_time = time.perf_counter() - t1
                 stats[qi].n_matches = len(matches)
                 results.append(matches)
+        n_matches = sum(len(m) for m in results)
+        if join_span is not None:
+            join_span.attrs["matches"] = n_matches
+        join_span_cm.__exit__(None, None, None)
+        _M_STAGE_S.labels(stage="join").observe(time.perf_counter() - t_join0)
+        _M_FUNNEL.labels(stage="matches").inc(n_matches)
+        if trace is not None:
+            trace.add_funnel(matches=n_matches)
         return results, stats, contributing
 
     @staticmethod

@@ -49,6 +49,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs.metrics import REGISTRY
+
 __all__ = [
     "PackedIndex",
     "PackedGroupIndex",
@@ -67,14 +69,75 @@ PALLAS_SCAN_CALLS = 0
 
 # (query, row) / (query, group) pairs issued by the batched probes since the
 # last reset — benchmarks/CI use these to prove the two-level grouped probe
-# issues measurably fewer leaf-level dominance comparisons (BENCH_grouped.json)
-PAIR_COUNTERS = {"leaf_pairs": 0, "group_pairs": 0}
+# issues measurably fewer leaf-level dominance comparisons (BENCH_grouped.json).
+# Backed by the obs registry (thread-safe: the engine executor thread, the
+# compaction thread, and cluster host threads all probe concurrently);
+# ``PAIR_COUNTERS`` below is a dict-like read/write view kept for
+# compatibility with tests, benchmarks, and dist/placement cost feeds.
+_PAIR_METRIC = REGISTRY.counter(
+    "gnnpe_probe_pairs_total",
+    "Probe pairs issued since process start, by predicate level",
+    labels=("kind",),
+)
+_LEAF_PAIRS = _PAIR_METRIC.labels(kind="leaf_pairs")
+_GROUP_PAIRS = _PAIR_METRIC.labels(kind="group_pairs")
+_PAIR_CHILDREN = {"leaf_pairs": _LEAF_PAIRS, "group_pairs": _GROUP_PAIRS}
 
 
-def reset_pair_counters() -> dict:
-    """Zero the probe pair counters; returns the dict (mutated in place)."""
-    PAIR_COUNTERS["leaf_pairs"] = 0
-    PAIR_COUNTERS["group_pairs"] = 0
+class _PairCountersView:
+    """Dict-compatible view over the registry pair counters.
+
+    Supports the historical access patterns — ``PAIR_COUNTERS["leaf_pairs"]``,
+    ``PAIR_COUNTERS["leaf_pairs"] += n``, ``dict(PAIR_COUNTERS)`` — while the
+    authoritative (locked) values live in the obs registry.
+    """
+
+    __slots__ = ()
+
+    def __getitem__(self, key: str) -> int:
+        return int(_PAIR_CHILDREN[key].value)
+
+    def __setitem__(self, key: str, value: int) -> None:
+        child = _PAIR_CHILDREN[key]
+        with child._lock:
+            child.value = float(value)
+
+    def __iter__(self):
+        return iter(_PAIR_CHILDREN)
+
+    def __len__(self) -> int:
+        return len(_PAIR_CHILDREN)
+
+    def __contains__(self, key: object) -> bool:
+        return key in _PAIR_CHILDREN
+
+    def keys(self):
+        return _PAIR_CHILDREN.keys()
+
+    def items(self):
+        return [(k, int(c.value)) for k, c in _PAIR_CHILDREN.items()]
+
+    def get(self, key: str, default: int = 0) -> int:
+        return self[key] if key in _PAIR_CHILDREN else default
+
+    def __eq__(self, other: object) -> bool:
+        if isinstance(other, (dict, _PairCountersView)):
+            other_items = other if isinstance(other, dict) else dict(other.items())
+            return dict(self.items()) == other_items
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return f"_PairCountersView({dict(self.items())!r})"
+
+
+PAIR_COUNTERS = _PairCountersView()
+
+
+def reset_pair_counters() -> "_PairCountersView":
+    """Zero the probe pair counters; returns the compat view."""
+    for child in _PAIR_CHILDREN.values():
+        with child._lock:
+            child.value = 0.0
     return PAIR_COUNTERS
 
 
@@ -505,7 +568,7 @@ def _pack_leaf_pairs(
     valid = row_mat < index.n_paths
     rows = row_mat[valid].astype(np.int64)
     q_ids = np.repeat(qi_pair, bs).reshape(-1, bs)[valid].astype(np.int64)
-    PAIR_COUNTERS["leaf_pairs"] += int(rows.size)
+    _LEAF_PAIRS.inc(int(rows.size))
     rows, q_ids = _prefilter_pairs(index, rows, q_ids, q_emb, q_multi, q_label_hash)
     return rows, q_ids
 
@@ -672,7 +735,7 @@ def _query_index_batch_multi_grouped(items, eps, return_stats, use_pallas):
             )
         cand, alive = _descend_batch(index, q_emb, q_emb0, q_multi, eps)
         g_ids, q_ids_g = _pack_group_pairs(index.groups, cand, alive)
-        PAIR_COUNTERS["group_pairs"] += int(g_ids.size)
+        _GROUP_PAIRS.inc(int(g_ids.size))
         packs.append(
             {
                 "Q": Q, "empty": False, "alive": alive, "index": index,
@@ -708,7 +771,7 @@ def _query_index_batch_multi_grouped(items, eps, return_stats, use_pallas):
         counts = gs[g_surv + 1] - gs[g_surv]
         rows = _expand_segments(gs[g_surv], counts)
         q_ids = np.repeat(q_surv, counts).astype(np.int64)
-        PAIR_COUNTERS["leaf_pairs"] += int(rows.size)
+        _LEAF_PAIRS.inc(int(rows.size))
         p["checked_groups"] = np.bincount(p["q_ids_g"], minlength=Q)
         p["surviving_groups"] = np.bincount(q_surv, minlength=Q)
         p["member_rows"] = np.bincount(q_ids, minlength=Q)

@@ -58,6 +58,8 @@ from ..core.index import hash_labels
 from ..core.matcher import match_from_candidates, match_from_candidates_many
 from ..core.planner import candidate_plan_paths, canonical_form
 from ..graphs import Graph
+from ..obs.export import EVENTS
+from ..obs.metrics import REGISTRY as _OBS
 from ..serve.cache import ShardedResultCache, canonical_matches, remap_matches
 from .placement import DEFAULT_WEIGHTS, partition_costs, place_partitions
 
@@ -75,6 +77,13 @@ __all__ = [
 class HostLostError(RuntimeError):
     """A host failed (or timed out) mid-gather; the coordinator
     re-probes its partitions locally."""
+
+
+_M_CLUSTER = _OBS.counter(
+    "gnnpe_cluster_events_total",
+    "Cluster control/data-plane events since process start",
+    labels=("event",),
+)
 
 
 def init_distributed(
@@ -342,6 +351,13 @@ class ClusterEngine:
             host.owned = self.placement.owned(h)
         if self.cache is not None:
             self.cache.set_placement(self.placement.host_of)
+        _M_CLUSTER.labels(event="rebalance").inc()
+        if EVENTS.active:
+            EVENTS.emit(
+                "rebalance",
+                n_hosts=len(self.hosts),
+                owned=[list(self.placement.owned(h)) for h in range(len(self.hosts))],
+            )
         return self.placement
 
     # ------------------------------------------------------------- probes --
@@ -353,6 +369,8 @@ class ClusterEngine:
         stats: dict | None = {} if return_stats else None
         self.stats["scatter_rounds"] += 1
         self.stats["requests_scattered"] += len(requests)
+        _M_CLUSTER.labels(event="scatter_round").inc()
+        _M_CLUSTER.labels(event="request_scattered").inc(len(requests))
         for host in self.hosts:
             if not host.owned:
                 continue
@@ -360,6 +378,14 @@ class ClusterEngine:
                 out = host.probe(queries, requests, return_stats=return_stats)
             except HostLostError:
                 self.stats["host_losses"] += 1
+                _M_CLUSTER.labels(event="host_loss").inc()
+                if EVENTS.active:
+                    EVENTS.emit(
+                        "host_loss",
+                        host=getattr(host, "host_id", None),
+                        n_owned=len(host.owned),
+                        reprobed_locally=True,
+                    )
                 out = self.engine.probe_candidates(
                     queries, requests, parts=host.owned, return_stats=return_stats
                 )
@@ -601,7 +627,21 @@ class ClusterEngine:
             if store is not None:
                 store.save(int(snap["generation"]), _generation_artifacts(built))
             if eng.install_generation(snap, built):
+                _M_CLUSTER.labels(event="generation_installed").inc()
+                if EVENTS.active:
+                    EVENTS.emit(
+                        "blue_green_swap",
+                        generation=int(snap["generation"]),
+                        installed=True,
+                    )
                 return {"generation": int(snap["generation"]), "installed": True}
+            _M_CLUSTER.labels(event="generation_install_conflict").inc()
+        if EVENTS.active:
+            EVENTS.emit(
+                "blue_green_swap",
+                generation=int(snap["generation"]),
+                installed=False,
+            )
         return {"generation": int(snap["generation"]), "installed": False}
 
     # ------------------------------------------------------------- status --

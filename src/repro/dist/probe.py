@@ -279,7 +279,7 @@ class StackedProbe:
             B = alive.shape[2]
             groups_in_block = (g.count.reshape(S, B, g.gpb) > 0).sum(axis=2)
             checked = np.einsum("sqb,sb->sq", alive, groups_in_block)
-            index_mod.PAIR_COUNTERS["group_pairs"] += int(checked.sum())
+            index_mod._GROUP_PAIRS.inc(int(checked.sum()))
             pi, qi, gi = np.nonzero(gkeep)
             starts = g.start[pi, gi]
             counts = g.count[pi, gi]
@@ -288,7 +288,7 @@ class StackedProbe:
             starts = bi.astype(np.int64) * bs
             counts = np.clip(st.n_paths[pi] - starts, 0, bs)
         total_pairs = int(counts.sum()) if counts.size else 0
-        index_mod.PAIR_COUNTERS["leaf_pairs"] += total_pairs
+        index_mod._LEAF_PAIRS.inc(total_pairs)
         if total_pairs:
             slot_lp = np.bincount(pi, weights=counts, minlength=S).astype(np.int64)
             self.part_leaf_pairs += slot_lp[st.slot_of]
@@ -608,7 +608,7 @@ class StackedProbe:
                 q_emb, q_emb0, q_multi, q_label_hash, eps, use_groups,
                 use_pallas, return_stats, live_mask,
             )
-        index_mod.PAIR_COUNTERS["leaf_pairs"] += total
+        index_mod._LEAF_PAIRS.inc(total)
         if total:
             # cells only (not pairs) cross back to the host here — the
             # same per-partition cost signal as the host path
@@ -620,7 +620,7 @@ class StackedProbe:
             # level-1 accounting matches the host probe: groups checked
             # per surviving (query, block) cell (gib cached in _leaf_tensors)
             checked_dev = jnp.einsum("sqb,sb->sq", alive.astype(jnp.int32), leaf["gib"])
-            index_mod.PAIR_COUNTERS["group_pairs"] += int(jnp.sum(checked_dev))
+            index_mod._GROUP_PAIRS.inc(int(jnp.sum(checked_dev)))
         if total == 0:
             per_b = [empty_b for _ in range(Q)]
             combo_counts = np.zeros(S * Q, np.int64)

@@ -28,6 +28,16 @@ from __future__ import annotations
 import dataclasses
 import time
 
+from ..obs.metrics import REGISTRY as _OBS
+
+# cumulative admission outcomes across all controllers, by reason —
+# the per-tenant split stays on AdmissionController.stats()
+_M_ADMIT = _OBS.counter(
+    "gnnpe_admission_decisions_total",
+    "Admission decisions by outcome reason",
+    labels=("reason",),
+)
+
 __all__ = ["TenantQuota", "AdmissionConfig", "AdmissionController", "DEFAULT_TENANT"]
 
 DEFAULT_TENANT = "default"
@@ -100,12 +110,15 @@ class AdmissionController:
         st = self._state(tenant)
         if st.backlog >= self.quota(tenant).max_backlog:
             st.rejected += 1
+            _M_ADMIT.labels(reason="tenant-backlog").inc()
             return False, "tenant-backlog"
         if not st.bucket.try_take(self._clock()):
             st.rejected += 1
+            _M_ADMIT.labels(reason="tenant-quota").inc()
             return False, "tenant-quota"
         st.backlog += 1
         st.admitted += 1
+        _M_ADMIT.labels(reason="admitted").inc()
         return True, ""
 
     def release(self, tenant: str) -> None:
@@ -122,8 +135,10 @@ class AdmissionController:
         st = self._state(tenant)
         if st.subscriptions >= self.quota(tenant).max_subscriptions:
             st.rejected += 1
+            _M_ADMIT.labels(reason="tenant-subscriptions").inc()
             return False, "tenant-subscriptions"
         st.subscriptions += 1
+        _M_ADMIT.labels(reason="subscription-admitted").inc()
         return True, ""
 
     def release_subscription(self, tenant: str) -> None:

@@ -40,6 +40,21 @@ import dataclasses
 
 import numpy as np
 
+from ..obs.metrics import REGISTRY as _OBS
+
+# process-wide cumulative mirrors of the per-instance CacheStats /
+# sharded eviction splits (repro.obs) — exported via /metrics
+_M_CACHE_EVENTS = _OBS.counter(
+    "gnnpe_cache_events_total",
+    "Result-cache events (hits, misses, insertions, invalidated, evicted)",
+    labels=("event",),
+)
+_M_CACHE_EVICT = _OBS.counter(
+    "gnnpe_cache_shard_evictions_total",
+    "ShardedResultCache evictions by locality scope",
+    labels=("scope",),
+)
+
 __all__ = [
     "ResultCache",
     "ShardedResultCache",
@@ -71,6 +86,14 @@ class CacheStats:
     insertions: int = 0
     invalidated: int = 0  # entries evicted by update invalidation
     evicted: int = 0  # entries evicted by the capacity bound
+
+    def __setattr__(self, name: str, value) -> None:
+        # mirror every increment into the registry counter — the
+        # per-instance fields stay authoritative for existing callers
+        delta = value - getattr(self, name, 0)
+        if delta > 0:
+            _M_CACHE_EVENTS.labels(event=name).inc(delta)
+        object.__setattr__(self, name, value)
 
     def hit_rate(self) -> float:
         total = self.hits + self.misses
@@ -293,6 +316,7 @@ class ShardedResultCache:
                 del self._home[key]
                 self._tick_of.pop(key, None)
                 self.lazy_evictions += 1
+                _M_CACHE_EVICT.labels(scope="lazy").inc()
                 if record:
                     self.stats.misses += 1
                 return None
@@ -343,10 +367,12 @@ class ShardedResultCache:
                 n = shard.invalidate(mutated)
                 if n:
                     self.local_evictions += n
+                    _M_CACHE_EVICT.labels(scope="local").inc(n)
             elif inserted:
                 n = shard.invalidate(mutated, eager_rule1=False)
                 if n:
                     self.remote_evictions += n
+                    _M_CACHE_EVICT.labels(scope="remote").inc(n)
             else:
                 n = 0
             total += n

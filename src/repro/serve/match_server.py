@@ -43,13 +43,44 @@ paper-scale index unchanged.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 import time
 
+from ..obs.export import EVENTS
+from ..obs.metrics import REGISTRY as _OBS
 from .errors import QueueFull
 
 __all__ = ["MatchServeConfig", "MatchServer"]
+
+# server-tier registry metrics: the cumulative complement to the bounded
+# tick_stats ring (the ring keeps recent detail; these keep full history)
+_M_TICK_S = _OBS.histogram(
+    "gnnpe_server_tick_seconds", "Fused match_many wall seconds per query tick"
+)
+_M_TICK_BATCH = _OBS.histogram(
+    "gnnpe_server_tick_batch_size",
+    "Queries fused per tick",
+    buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256),
+)
+_M_TICK_Q = _OBS.counter("gnnpe_server_queries_total", "Queries served across all ticks")
+_M_TICK_ERR = _OBS.counter(
+    "gnnpe_server_tick_errors_total", "Per-query errors inside isolated ticks"
+)
+_M_UPDATE_S = _OBS.histogram(
+    "gnnpe_server_update_epoch_seconds", "apply_updates wall seconds per epoch"
+)
+_M_UPDATES = _OBS.counter(
+    "gnnpe_server_updates_applied_total", "GraphUpdate batches applied"
+)
+_M_COALESCED = _OBS.counter(
+    "gnnpe_server_coalesced_pulls_total",
+    "Updates pulled into earlier epochs by hot-vertex coalescing",
+)
+_M_QUEUE_DEPTH = _OBS.gauge(
+    "gnnpe_server_queue_depth", "Queued items after the last tick", labels=("queue",)
+)
 
 
 @dataclasses.dataclass
@@ -91,6 +122,10 @@ class MatchServeConfig:
     # over-threshold partitions inside the update tick; "defer" leaves
     # them on engine.pending_compactions() for a background compactor
     compaction: str = "inline"
+    # bound on the in-memory per-tick stat rings (tick_stats, update_s,
+    # update_summaries) — a long-running server keeps the latest N while
+    # the obs registry histograms carry the full cumulative history
+    stats_maxlen: int = 1024
 
 
 @dataclasses.dataclass
@@ -117,11 +152,13 @@ class MatchServer:
         self.service_s: dict = {}  # rid -> its tick's fused match_many time
         self._next_id = 0
         self.update_queue: list = []  # pending GraphUpdate batches
-        self.update_s: list = []  # per-tick apply_updates wall time
+        # bounded rings (cfg.stats_maxlen): recent per-tick detail; the
+        # cumulative history lives in the obs registry histograms
+        self.update_s = collections.deque(maxlen=cfg.stats_maxlen)
         self.n_updates_applied = 0
         self.coalesced_pulls = 0  # updates pulled into earlier epochs (coalesce_hot)
-        self.update_summaries: list = []  # apply_updates summaries, in order
-        self.tick_stats: list = []  # per query tick: batch size, wall, cost span
+        self.update_summaries = collections.deque(maxlen=cfg.stats_maxlen)
+        self.tick_stats = collections.deque(maxlen=cfg.stats_maxlen)
         # standing queries: registry built lazily on first subscribe();
         # match_deltas logs every emitted MatchDelta per subscription
         self.registry = None
@@ -225,12 +262,22 @@ class MatchServer:
         if self.cfg.coalesce_hot and self.update_queue:
             self._pull_hot_updates(batch_u)
         t_u = time.perf_counter()
-        self.update_summaries.append(
-            self.engine.apply_updates(batch_u, compaction=self.cfg.compaction)
-        )
+        summary = self.engine.apply_updates(batch_u, compaction=self.cfg.compaction)
+        self.update_summaries.append(summary)
         self._standing_tick()
-        self.update_s.append(time.perf_counter() - t_u)
+        wall_u = time.perf_counter() - t_u
+        self.update_s.append(wall_u)
         self.n_updates_applied += len(batch_u)
+        _M_UPDATE_S.observe(wall_u)
+        _M_UPDATES.inc(len(batch_u))
+        _M_QUEUE_DEPTH.labels(queue="update").set(len(self.update_queue))
+        if EVENTS.active:
+            EVENTS.emit(
+                "update_epoch",
+                n_updates=len(batch_u),
+                wall_s=wall_u,
+                **{k: summary[k] for k in ("epoch", "mutated", "compacted") if k in summary},
+            )
         return len(batch_u)
 
     def _pull_hot_updates(self, batch_u: list) -> int:
@@ -272,6 +319,8 @@ class MatchServer:
             skipped_hint |= vs
         self.update_queue = keep
         self.coalesced_pulls += pulled
+        if pulled:
+            _M_COALESCED.inc(pulled)
         return pulled
 
     def execute_batch(self, queries: list, isolate: bool = False):
@@ -304,6 +353,12 @@ class MatchServer:
                 "max_cost": None,
             }
         )
+        _M_TICK_S.observe(wall)
+        _M_TICK_BATCH.observe(len(queries))
+        _M_TICK_Q.inc(len(queries))
+        if n_errors:
+            _M_TICK_ERR.inc(n_errors)
+        _M_QUEUE_DEPTH.labels(queue="query").set(len(self.queue))
         return results, wall
 
     # ------------------------------------------------------------- loop ---

@@ -13,14 +13,27 @@ from __future__ import annotations
 
 import time
 
+from ..obs.export import MetricsHTTPServer
+from ..obs.metrics import REGISTRY as _OBS
 from .errors import QueueFull
 
 __all__ = ["ClusterRouter"]
 
+_M_ROUTER_Q = _OBS.counter(
+    "gnnpe_router_queries_total", "Queries served by ClusterRouter ticks"
+)
+_M_ROUTER_TICK_S = _OBS.histogram(
+    "gnnpe_router_tick_seconds", "ClusterRouter tick wall time"
+)
+_M_ROUTER_DEPTH = _OBS.gauge(
+    "gnnpe_router_queue_depth", "ClusterRouter queue depth after a tick",
+    labels=("queue",),
+)
+
 
 class ClusterRouter:
     def __init__(self, cluster, max_batch: int = 16, max_updates_per_tick: int = 4,
-                 max_queue: int = 0):
+                 max_queue: int = 0, metrics_port: int | None = None):
         self.cluster = cluster
         self.max_batch = int(max_batch)
         self.max_updates_per_tick = int(max_updates_per_tick)
@@ -30,6 +43,9 @@ class ClusterRouter:
         self.finished: dict = {}  # rid -> match list
         self.latency_s: dict = {}
         self._next_id = 0
+        self.metrics_server = (
+            MetricsHTTPServer(port=metrics_port) if metrics_port is not None else None
+        )
 
     # ------------------------------------------------------------- API ----
     def submit(self, query) -> int:
@@ -49,6 +65,7 @@ class ClusterRouter:
         as one epoch (owner-shard cache invalidation inside the cluster
         engine), then scatter-gather one query batch.  Returns queries
         served."""
+        t_tick = time.perf_counter()
         if self.update_queue:
             n = self.max_updates_per_tick
             batch_u, self.update_queue = self.update_queue[:n], self.update_queue[n:]
@@ -61,6 +78,10 @@ class ClusterRouter:
         for (rid, _, t0), matches in zip(batch, results):
             self.finished[rid] = matches
             self.latency_s[rid] = now - t0
+        _M_ROUTER_Q.inc(len(batch))
+        _M_ROUTER_TICK_S.observe(now - t_tick)
+        _M_ROUTER_DEPTH.labels(queue="query").set(len(self.queue))
+        _M_ROUTER_DEPTH.labels(queue="update").set(len(self.update_queue))
         return len(batch)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> dict:
@@ -68,6 +89,11 @@ class ClusterRouter:
             if self.step() == 0 and not self.update_queue:
                 break
         return self.finished
+
+    def close(self) -> None:
+        if self.metrics_server is not None:
+            self.metrics_server.close()
+            self.metrics_server = None
 
     def stats(self) -> dict:
         return {

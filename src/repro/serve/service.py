@@ -64,6 +64,9 @@ import dataclasses
 import time
 from concurrent.futures import ThreadPoolExecutor
 
+from ..obs.export import EVENTS, MetricsHTTPServer
+from ..obs.metrics import REGISTRY as _OBS
+from ..obs.trace import TRACER
 from .admission import DEFAULT_TENANT, AdmissionConfig, AdmissionController
 from .errors import TransientError
 from .match_server import MatchServeConfig, MatchServer
@@ -77,6 +80,39 @@ SHED = "shed"  # overload: global queue full (or evicted by policy)
 EXPIRED = "expired"  # deadline passed before the request could run
 ERROR = "error"  # quarantined: the request itself raises
 RETRY_EXHAUSTED = "retry-exhausted"  # transient faults/timeouts beyond budget
+
+# every per-instance ``service.counters`` increment mirrors into this
+# labeled registry counter — the process-wide cumulative view across
+# all MatchService instances (the instance dict keeps exact per-service
+# numbers for existing callers/tests)
+_M_SERVICE_EVENTS = _OBS.counter(
+    "gnnpe_service_events_total",
+    "Service lifecycle events (terminal statuses, retries, compactions, subs)",
+    labels=("event",),
+)
+_M_REQUEST_S = _OBS.histogram(
+    "gnnpe_service_request_seconds",
+    "Submit-to-terminal latency by outcome",
+    labels=("status",),
+)
+_M_SHED = _OBS.counter(
+    "gnnpe_service_shed_total",
+    "Shed/evicted submissions by reason",
+    labels=("reason",),
+)
+
+
+class _MirroredCounters(dict):
+    """Per-instance counter dict whose increments also land in the
+    process-wide ``gnnpe_service_events_total{event=...}`` registry
+    counter.  ``c[k] += n`` is the only mutation pattern in this module,
+    so mirroring ``__setitem__`` deltas is exact."""
+
+    def __setitem__(self, key: str, value) -> None:
+        delta = value - self.get(key, 0)
+        if delta > 0:
+            _M_SERVICE_EVENTS.labels(event=key).inc(delta)
+        super().__setitem__(key, value)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +147,13 @@ class ServiceConfig:
     # falls further behind is SHED (subscription closed) instead of
     # stalling the tick thread or growing memory without bound
     max_deltas_buffered: int = 256
+    # observability: serve a stdlib /metrics endpoint (Prometheus text +
+    # /metrics.json) while the service runs; None = no endpoint, 0 = an
+    # ephemeral port (read it off ``service.metrics_server.port``)
+    metrics_port: int | None = None
+    # per-request trace sampling rate applied to the process tracer
+    # (repro.obs.trace.TRACER) at construction; None leaves it untouched
+    trace_rate: float | None = None
 
 
 @dataclasses.dataclass
@@ -154,7 +197,7 @@ class SubscriptionHandle:
 class _Pending:
     __slots__ = (
         "rid", "tenant", "query", "priority", "deadline", "cost",
-        "attempts", "t_submit", "future", "done",
+        "attempts", "t_submit", "future", "done", "trace", "t_queued",
     )
 
     def __init__(self, rid, tenant, query, priority, deadline, cost, t_submit, future):
@@ -168,6 +211,8 @@ class _Pending:
         self.t_submit = t_submit
         self.future = future
         self.done = False
+        self.trace = None  # sampled QueryTrace (repro.obs), else None
+        self.t_queued = 0.0  # perf_counter at (re)queue, for queue_wait spans
 
 
 class MatchService:
@@ -219,19 +264,24 @@ class MatchService:
         self._compact_inflight: set[int] = set()
         self.responses: dict[int, Response] = {}
         self.subscriptions: dict[int, SubscriptionHandle] = {}
-        self.counters = {
+        self.counters = _MirroredCounters({
             "submitted": 0, "admitted": 0, "cache_fastpath": 0,
             OK: 0, REJECTED: 0, SHED: 0, EXPIRED: 0, ERROR: 0, RETRY_EXHAUSTED: 0,
             "retries": 0, "attempt_timeouts": 0, "evictions": 0,
             "compactions_installed": 0, "compactions_discarded": 0,
             "subscribed": 0, "subs_rejected": 0, "subs_shed": 0,
             "subs_quarantined": 0, "deltas_delivered": 0,
-        }
+        })
+        self.metrics_server: MetricsHTTPServer | None = None
+        if cfg.trace_rate is not None:
+            TRACER.trace_rate = float(cfg.trace_rate)
 
     # ------------------------------------------------------------- API ----
     async def start(self) -> "MatchService":
         assert self._task is None, "service already started"
         self._running = True
+        if self.cfg.metrics_port is not None and self.metrics_server is None:
+            self.metrics_server = MetricsHTTPServer(port=self.cfg.metrics_port)
         self._task = asyncio.create_task(self._serve_loop(), name="match-service-loop")
         return self
 
@@ -247,6 +297,9 @@ class MatchService:
             t.cancel()
         self._engine_pool.shutdown(wait=True)
         self._compact_pool.shutdown(wait=True)
+        if self.metrics_server is not None:
+            self.metrics_server.close()
+            self.metrics_server = None
 
     async def drain(self) -> None:
         """Wait until every admitted request is terminal and no update
@@ -273,6 +326,8 @@ class MatchService:
         self._next_id += 1
         now = time.monotonic()
         self.counters["submitted"] += 1
+        trace = TRACER.begin(rid)  # sampled; None when off
+        t_adm = time.perf_counter()
         # overload fast path: answer signature-cached repeats at cache
         # cost without consuming queue space or quota — under overload
         # this is the "serve what we already know" degradation mode
@@ -281,20 +336,29 @@ class MatchService:
             if hit is not None:
                 self.counters["cache_fastpath"] += 1
                 return rid, self._finish_new(
-                    fut, rid, tenant, OK, matches=hit, from_cache=True, t_submit=now
+                    fut, rid, tenant, OK, matches=hit, from_cache=True, t_submit=now,
+                    trace=trace, t_adm=t_adm,
                 )
         admitted, reason = self.admission.admit(tenant)
         if not admitted:
-            return rid, self._finish_new(fut, rid, tenant, REJECTED, reason=reason, t_submit=now)
+            return rid, self._finish_new(
+                fut, rid, tenant, REJECTED, reason=reason, t_submit=now,
+                trace=trace, t_adm=t_adm,
+            )
         deadline_s = deadline_s if deadline_s is not None else self.cfg.default_deadline_s
         deadline = now + deadline_s if deadline_s is not None else None
         cost = float(self.engine.plan_cost(query)) if self.cfg.schedule != "fifo" else 0.0
         req = _Pending(rid, tenant, query, priority, deadline, cost, now, fut)
+        req.trace = trace
         if self._n_queued >= self.cfg.max_queue and not self._make_room(req, now):
             self.admission.release(tenant)
+            req.trace = None
             return rid, self._finish_new(
-                fut, rid, tenant, SHED, reason="queue-full", t_submit=now
+                fut, rid, tenant, SHED, reason="queue-full", t_submit=now,
+                trace=trace, t_adm=t_adm,
             )
+        if trace is not None:
+            trace.add_span("admission", t_adm, time.perf_counter(), admitted=True)
         self._n_unfinished += 1
         self._push(req, now)
         return rid, fut
@@ -391,6 +455,11 @@ class MatchService:
             handle.status = ERROR
             handle.reason = delta.error
             self.counters["subs_quarantined"] += 1
+            if EVENTS.active:
+                EVENTS.emit(
+                    "quarantine", kind="subscription", sub_id=handle.sub_id,
+                    tenant=handle.tenant, reason=delta.error,
+                )
             self.admission.release_subscription(handle.tenant)
             try:
                 handle.deltas.put_nowait(delta)
@@ -425,6 +494,7 @@ class MatchService:
 
     def _push(self, req: _Pending, now: float) -> None:
         self._seq += 1
+        req.t_queued = time.perf_counter()
         self._queue.put_nowait(((req.priority, self._rank(req, now), self._seq), req))
         self._n_queued += 1
         self._wake.set()
@@ -470,7 +540,7 @@ class MatchService:
 
     # -------------------------------------------------------- outcomes ----
     def _finish_new(self, fut, rid, tenant, status, matches=None, reason="",
-                    from_cache=False, t_submit=0.0):
+                    from_cache=False, t_submit=0.0, trace=None, t_adm=None):
         """Resolve a submission that never entered the queue."""
         resp = Response(
             request_id=rid, tenant=tenant, status=status, matches=matches,
@@ -478,17 +548,45 @@ class MatchService:
         )
         self.responses[rid] = resp
         self.counters[status] += 1
+        _M_REQUEST_S.labels(status=status).observe(0.0)
+        if status in (SHED, REJECTED):
+            _M_SHED.labels(reason=reason or status).inc()
+        if trace is not None:
+            if t_adm is not None:
+                trace.add_span(
+                    "admission", t_adm, time.perf_counter(),
+                    admitted=False, from_cache=from_cache, reason=reason,
+                )
+            trace.root.attrs.update(status=status, from_cache=from_cache)
+            TRACER.end(trace)
+        if EVENTS.active:
+            EVENTS.emit(
+                "request", rid=rid, tenant=tenant, status=status,
+                reason=reason, from_cache=from_cache, latency_s=0.0,
+            )
         fut.set_result(resp)
         return fut
 
     def _resolve(self, req: _Pending, status: str, matches=None, reason="") -> None:
+        latency = time.monotonic() - req.t_submit
         resp = Response(
             request_id=req.rid, tenant=req.tenant, status=status, matches=matches,
-            reason=reason, attempts=req.attempts,
-            latency_s=time.monotonic() - req.t_submit,
+            reason=reason, attempts=req.attempts, latency_s=latency,
         )
         self.responses[req.rid] = resp
         self.counters[status] += 1
+        _M_REQUEST_S.labels(status=status).observe(latency)
+        if status == SHED:
+            _M_SHED.labels(reason=reason or status).inc()
+        if req.trace is not None:
+            req.trace.root.attrs.update(status=status, attempts=req.attempts)
+            TRACER.end(req.trace)
+            req.trace = None
+        if EVENTS.active:
+            EVENTS.emit(
+                "request", rid=req.rid, tenant=req.tenant, status=status,
+                reason=reason, attempts=req.attempts, latency_s=latency,
+            )
         self.admission.release(req.tenant)
         self._n_unfinished -= 1
         if not req.future.done():
@@ -554,9 +652,24 @@ class MatchService:
     async def _run_batch(self, batch: list) -> None:
         loop = asyncio.get_running_loop()
         queries = [r.query for r in batch]
-        fut = loop.run_in_executor(
-            self._engine_pool, lambda: self.server.execute_batch(queries, isolate=True)
-        )
+        t_exec0 = time.perf_counter()
+        # one rider's trace adopts the engine call, so its span tree
+        # carries the tick's full engine breakdown (plan/probe/join +
+        # pruning funnel); every traced rider gets its queue_wait span
+        lead = None
+        for req in batch:
+            if req.trace is not None:
+                req.trace.add_span(
+                    "queue_wait", req.t_queued, t_exec0, attempt=req.attempts
+                )
+                if lead is None:
+                    lead = req.trace
+
+        def _exec():
+            with TRACER.adopt(lead):
+                return self.server.execute_batch(queries, isolate=True)
+
+        fut = loop.run_in_executor(self._engine_pool, _exec)
         try:
             results, _ = await asyncio.wait_for(fut, timeout=self.cfg.attempt_timeout_s)
         except (asyncio.TimeoutError, TimeoutError):
@@ -566,10 +679,19 @@ class MatchService:
             # then; every rider is retried like a transient fault.
             self.counters["attempt_timeouts"] += 1
             now = time.monotonic()
+            t_exec1 = time.perf_counter()
             for req in batch:
+                if req.trace is not None:
+                    req.trace.add_span("execute", t_exec0, t_exec1, timed_out=True)
                 self._handle_transient(req, "attempt-timeout", now)
             return
         now = time.monotonic()
+        t_exec1 = time.perf_counter()
+        for req in batch:
+            if req.trace is not None and req.trace is not lead:
+                # lead's engine spans landed inline; the others record
+                # the shared tick wall as one flat execute span
+                req.trace.add_span("execute", t_exec0, t_exec1)
         for req, (ok, value) in zip(batch, results):
             if ok:
                 req.done = True
@@ -615,5 +737,7 @@ class MatchService:
             self.counters[
                 "compactions_installed" if installed else "compactions_discarded"
             ] += 1
+            if EVENTS.active:
+                EVENTS.emit("compaction_install", partition=mi, installed=installed)
         finally:
             self._compact_inflight.discard(mi)

@@ -56,6 +56,16 @@ import numpy as np
 from ..core.delta import probe_delta_multi, paths_touching
 from ..core.index import hash_labels
 from ..core.matcher import match_from_candidates, sort_matches
+from ..obs.export import EVENTS
+from ..obs.metrics import REGISTRY as _OBS
+
+# the skip / incremental / full-refresh work ladder, cumulatively across
+# all registries — the per-subscription split stays on Subscription
+_M_STANDING = _OBS.counter(
+    "gnnpe_standing_ticks_total",
+    "Per-subscription tick outcomes on the standing-query work ladder",
+    labels=("work",),
+)
 
 __all__ = [
     "MatchDelta",
@@ -502,12 +512,19 @@ class StandingQueryRegistry:
                 if getattr(exc, "transient", False):
                     # attempt-scoped: state is untouched, retry next tick
                     self.counters["transient_errors"] += 1
+                    _M_STANDING.labels(work="transient-error").inc()
                     continue
                 if sub.failures < self.max_failures:
                     continue
                 sub.quarantined = True
                 sub.error = f"{type(exc).__name__}: {exc}"
                 self.counters["quarantined"] += 1
+                _M_STANDING.labels(work="quarantined").inc()
+                if EVENTS.active:
+                    EVENTS.emit(
+                        "quarantine", kind="standing", sub_id=sid,
+                        tenant=sub.tenant, reason=sub.error,
+                    )
                 delta = MatchDelta((), (), epoch, error=sub.error)
                 out[sid] = delta
                 if sub.callback is not None:
@@ -518,12 +535,15 @@ class StandingQueryRegistry:
             if work == "skip":
                 sub.n_skipped += 1
                 self.counters["skipped"] += 1
+                _M_STANDING.labels(work="skip").inc()
             elif work == "full":
                 sub.n_refreshed += 1
                 self.counters["refreshed"] += 1
+                _M_STANDING.labels(work="full").inc()
             elif work == "incremental":
                 sub.n_advanced += 1
                 self.counters["advanced"] += 1
+                _M_STANDING.labels(work="incremental").inc()
             if not delta.empty:
                 out[sid] = delta
                 if sub.callback is not None:

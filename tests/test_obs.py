@@ -1,0 +1,338 @@
+"""Unified observability layer (obs/): metrics registry semantics,
+per-query span tracing with the pruning funnel, and the exporters.
+
+Contracts under test:
+
+- registry: labeled children, histogram bucketing, idempotent
+  registration, and EXACT sums under concurrent increments (8 threads);
+- tracing: a traced ``match_many`` yields the full stage tree — probe
+  partition children match the partitions probed, the funnel equals the
+  ``PAIR_COUNTERS`` deltas, and per-stage latencies sum (within slack)
+  to the end-to-end wall;
+- export: Prometheus text round-trips through the bundled parser, the
+  JSON snapshot equals the registry state, and the /metrics endpoint
+  serves both;
+- service accounting: across a faulted ``MatchService`` run the
+  per-status counters sum exactly to submitted — no lost requests.
+
+Registry metrics are process-global and cumulative, so every assertion
+on engine/service metrics works in deltas, never absolutes.
+"""
+import asyncio
+import json
+import threading
+import urllib.request
+
+import pytest
+
+from repro.core import GnnPeConfig, GnnPeEngine
+from repro.core import index as index_mod
+from repro.graphs import erdos_renyi, random_connected_query
+from repro.obs import (
+    EVENTS,
+    REGISTRY,
+    TRACER,
+    EventLog,
+    MetricsHTTPServer,
+    MetricsRegistry,
+    disable,
+    enable,
+    parse_prometheus,
+    to_prometheus,
+    trace_query,
+    write_json_snapshot,
+)
+from repro.serve.faults import FaultSpec, FlakyEngine
+from repro.serve.service import MatchService, ServiceConfig
+
+# ---------------------------------------------------------------- helpers --
+
+
+def _base_graph(seed: int = 5):
+    return erdos_renyi(150, avg_degree=3.5, n_labels=4, seed=seed)
+
+
+def _engine(g=None, **overrides):
+    g = _base_graph() if g is None else g
+    cfg = GnnPeConfig(
+        n_partitions=3, encoder="monotone", n_multi=1, block_size=32,
+        group_size=4, seed=7, **overrides,
+    )
+    return GnnPeEngine(cfg).build(g)
+
+
+def _queries(g, n=4, size=4, seed0=50):
+    out, s = [], seed0
+    while len(out) < n:
+        try:
+            out.append(random_connected_query(g, size + len(out) % 3, seed=s))
+        except RuntimeError:
+            pass
+        s += 1
+    return out
+
+
+# ---------------------------------------------------------- registry unit --
+
+
+def test_counter_labels_and_bare():
+    reg = MetricsRegistry()
+    c = reg.counter("t_requests_total", "requests", labels=("status",))
+    c.labels(status="ok").inc()
+    c.labels(status="ok").inc(2)
+    c.labels(status="err").inc()
+    snap = c.snapshot()
+    vals = {tuple(v["labels"].items()): v["value"] for v in snap["values"]}
+    assert vals[(("status", "ok"),)] == 3
+    assert vals[(("status", "err"),)] == 1
+    # a labeled metric refuses bare mutation; a bare one refuses labels()
+    with pytest.raises(ValueError):
+        c.inc()
+    bare = reg.counter("t_ticks_total", "ticks")
+    bare.inc(5)
+    with pytest.raises(ValueError):
+        bare.labels(status="ok")
+    assert bare.get() == 5
+
+
+def test_registry_idempotent_and_type_checked():
+    reg = MetricsRegistry()
+    a = reg.counter("t_dup_total", "x")
+    assert reg.counter("t_dup_total", "x") is a
+    with pytest.raises(ValueError):
+        reg.gauge("t_dup_total", "x")
+    with pytest.raises(ValueError):
+        reg.counter("t_dup_total", "x", labels=("k",))
+
+
+def test_gauge_set_and_histogram_buckets():
+    reg = MetricsRegistry()
+    g = reg.gauge("t_depth", "queue depth")
+    g.set(7)
+    g.set(3)
+    assert g.get() == 3
+    h = reg.histogram("t_lat_seconds", "latency", buckets=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.05, 0.5, 5.0):
+        h.observe(v)
+    snap = h.snapshot()["values"][0]
+    assert snap["buckets"] == [0.01, 0.1, 1.0]
+    # per-bucket (non-cumulative) counts, +Inf slot last
+    assert snap["counts"] == [1, 1, 1, 1]
+    assert snap["count"] == 4
+    assert snap["sum"] == pytest.approx(5.555)
+
+
+def test_concurrent_increments_sum_exactly():
+    """8 threads hammering one child must lose no increments — the
+    reason children carry a real lock instead of a bare ``+=``."""
+    reg = MetricsRegistry()
+    c = reg.counter("t_conc_total", "x", labels=("who",))
+    child = c.labels(who="all")
+    n_threads, per = 8, 10_000
+
+    def work():
+        for _ in range(per):
+            child.inc()
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert child.value == n_threads * per
+
+
+def test_disable_makes_mutations_noops():
+    reg = MetricsRegistry()
+    c = reg.counter("t_off_total", "x")
+    try:
+        disable()
+        c.inc(100)
+        with trace_query("q") as tr:
+            assert tr is None
+    finally:
+        enable()
+    assert c.get() == 0
+    c.inc()
+    assert c.get() == 1
+
+
+# ------------------------------------------------------------- trace tree --
+
+
+def test_traced_match_many_funnel_and_stages():
+    """The acceptance contract: one traced query exposes the full
+    pruning funnel (== PAIR_COUNTERS deltas), per-partition probe
+    attribution, and stage latencies that sum to the end-to-end wall."""
+    eng = _engine(index_kind="grouped")
+    qs = _queries(eng.graph, n=3)
+    eng.match_many(qs)  # warm compile outside the trace
+    TRACER.trace_rate = 1.0
+    before = dict(index_mod.PAIR_COUNTERS)
+    with trace_query("probe-test") as tr:
+        assert tr is not None
+        eng.match_many(qs)
+    after = dict(index_mod.PAIR_COUNTERS)
+
+    # funnel == the global pair-counter deltas for this batch
+    assert tr.funnel["leaf_pairs"] == after["leaf_pairs"] - before["leaf_pairs"]
+    assert tr.funnel["group_pairs"] == after["group_pairs"] - before["group_pairs"]
+    assert tr.funnel["leaf_pairs"] > 0
+    assert 0 < tr.funnel["surviving_groups"]
+    assert 0 < tr.funnel["candidates"] <= tr.funnel["leaf_pairs"]
+    assert 0 <= tr.funnel["matches"] <= tr.funnel["candidates"]
+    assert 0.0 <= tr.pruning_power() <= 1.0
+
+    # stage tree: embed/plan/probe/assemble/join all present, once each
+    for name in ("embed", "plan", "probe", "assemble", "join"):
+        assert len(tr.root.find(name)) == 1, name
+    # per-partition children under the probe span, one per partition
+    # probed, each attributing main vs delta rows
+    parts = tr.root.find("partition")
+    assert parts, "probe span has no partition children"
+    ids = [s.attrs["part"] for s in parts]
+    assert len(ids) == len(set(ids)) <= eng.cfg.n_partitions
+    assert sum(s.attrs["main_rows"] + s.attrs["delta_rows"] for s in parts) > 0
+    for s in parts:
+        assert s.attrs["delta_rows"] == 0  # no deltas applied yet
+
+    # stage latencies sum (within slack) to the traced wall time
+    stage_s = sum(
+        s.duration_s
+        for s in tr.root.children
+        if s.name in ("cache_lookup", "embed", "plan", "probe", "assemble",
+                      "join", "cache_store")
+    )
+    wall = tr.root.duration_s
+    assert stage_s <= wall * 1.01 + 1e-6
+    assert stage_s >= wall * 0.5, (stage_s, wall)
+
+    # the trace landed in the ring and serialises
+    assert any(t is tr for t in TRACER.recent())
+    d = tr.as_dict()
+    assert d["funnel"] == tr.funnel
+    json.dumps(d)  # round-trippable
+
+
+def test_trace_sampling_deterministic():
+    TRACER.clear()
+    old = TRACER.trace_rate
+    try:
+        TRACER.trace_rate = 0.25
+        sampled = 0
+        for i in range(40):
+            with trace_query(i) as tr:
+                sampled += tr is not None
+        assert sampled == 10  # exactly rate * n, no RNG
+    finally:
+        TRACER.trace_rate = old
+
+
+# --------------------------------------------------------------- exporters --
+
+
+def test_prometheus_round_trip_and_json_snapshot(tmp_path):
+    reg = MetricsRegistry()
+    c = reg.counter("t_rt_total", "reqs", labels=("status",))
+    c.labels(status="ok").inc(3)
+    c.labels(status='we"ird\\').inc()  # escaping
+    h = reg.histogram("t_rt_seconds", "lat", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    g = reg.gauge("t_rt_depth", "depth")
+    g.set(4)
+
+    text = to_prometheus(reg.snapshot())
+    assert "# TYPE t_rt_total counter" in text
+    assert "# TYPE t_rt_seconds histogram" in text
+    parsed = parse_prometheus(text)
+    assert parsed['t_rt_total{status="ok"}'] == 3
+    assert parsed['t_rt_seconds_bucket{le="0.1"}'] == 1
+    assert parsed['t_rt_seconds_bucket{le="1"}'] == 2  # cumulative
+    assert parsed['t_rt_seconds_bucket{le="+Inf"}'] == 2
+    assert parsed["t_rt_seconds_count"] == 2
+    assert parsed["t_rt_seconds_sum"] == pytest.approx(0.55)
+    assert parsed["t_rt_depth"] == 4
+    with pytest.raises(ValueError):
+        parse_prometheus("not a metric line at all{")
+
+    path = tmp_path / "snap.json"
+    write_json_snapshot(path, reg.snapshot(), extra={"run": "t"})
+    doc = json.loads(path.read_text())
+    assert doc["run"] == "t"
+    assert doc["metrics"] == reg.snapshot()
+
+
+def test_metrics_http_endpoint():
+    reg = MetricsRegistry()
+    reg.counter("t_http_total", "x").inc(2)
+    with MetricsHTTPServer(port=0, registry=reg) as srv:
+        body = urllib.request.urlopen(srv.url).read().decode()
+        assert "t_http_total 2" in body
+        js = urllib.request.urlopen(srv.url + ".json").read().decode()
+        assert json.loads(js)["t_http_total"]["type"] == "counter"
+
+
+def test_event_log_lines(tmp_path):
+    path = tmp_path / "events.jsonl"
+    log = EventLog()
+    assert not log.active
+    log.to_path(path)
+    assert log.active
+    log.emit("request", rid=1, status="ok")
+    log.emit("host_loss", host=2)
+    log.close()
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert [e["event"] for e in lines] == ["request", "host_loss"]
+    assert lines[0]["rid"] == 1 and "ts" in lines[0]
+
+
+# ------------------------------------------------- service accounting -----
+
+
+def _status_counts():
+    """Per-status completion counts from the registry histogram."""
+    m = REGISTRY.get("gnnpe_service_request_seconds")
+    out = {}
+    for v in m.snapshot()["values"]:
+        out[v["labels"]["status"]] = v["count"]
+    return out
+
+
+def test_faulted_service_counters_sum_to_submitted():
+    """Zero lost requests, provable from counters alone: across a run
+    with a poisoned query and forced sheds, every submitted request
+    lands in exactly one terminal status — in the service's own
+    counters AND in the registry deltas behind /metrics."""
+    g = _base_graph()
+    eng = _engine(g)
+    qs = _queries(g, n=8)
+    flaky = FlakyEngine(eng, FaultSpec(poison=lambda q: q is qs[5]))
+    svc = MatchService(flaky, ServiceConfig(
+        max_batch=4, idle_tick_s=0.02, backoff_base_s=0.005,
+        cache_fastpath=False,
+    ))
+    before = _status_counts()
+
+    async def run():
+        await svc.start()
+        futs = [svc.submit(q)[1] for q in qs]
+        resps = await asyncio.gather(*futs)
+        await svc.stop()
+        return resps
+
+    resps = asyncio.run(run())
+    c = svc.counters
+    statuses = ("ok", "rejected", "shed", "expired", "error", "retry-exhausted")
+    assert sum(c[s] for s in statuses) == c["submitted"] == len(qs)
+    assert c["error"] == 1 and c["ok"] == len(qs) - 1
+    assert sum(1 for r in resps if r.status == "error") == 1
+
+    after = _status_counts()
+    deltas = {k: after.get(k, 0) - before.get(k, 0) for k in after}
+    assert sum(deltas.values()) == len(qs)
+    assert deltas.get("error", 0) == 1 and deltas.get("ok", 0) == len(qs) - 1
+
+    # and the same numbers survive the Prometheus round trip
+    parsed = parse_prometheus(to_prometheus())
+    assert parsed['gnnpe_service_request_seconds_count{status="error"}'] >= 1
