@@ -37,7 +37,7 @@ import numpy as np
 from repro.core import GraphUpdate
 from repro.dist.cluster import ClusterEngine
 
-from .common import build_engine, emit, make_graph, sample_queries
+from .common import artifact_path, build_engine, emit, make_graph, sample_queries
 
 HOST_COUNTS = (1, 2, 4)
 N_QUERIES = 10
@@ -135,7 +135,7 @@ def run(full: bool = False, json_path: str | None = None) -> dict:
         "placement_balanced": bool(balanced),
         "cache_locality_ok": bool(locality_ok),
     }
-    json_path = json_path or os.environ.get("BENCH_JSON")
+    json_path = artifact_path("BENCH_cluster.json", json_path)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rec, f, indent=1)

@@ -1,0 +1,174 @@
+"""Durability tax + recovery bound (``BENCH_durability.json``).
+
+Three contracts of the crash-safety layer (repro.durability), measured on
+identical engine replicas cloned through a snapshot round trip:
+
+* **WAL overhead ≤ 10%** — the same update stream applied with
+  log-before-apply journaling (fsync per record, snapshots off) vs bare
+  ``apply_updates``.  Min-of-repeats on both sides filters scheduler
+  noise; the ceiling gates as ``wal_overhead_ok``.
+* **recovery ≡ no-crash replica** — after a snapshot-cadenced durable
+  run, ``recover_engine`` from the directory must reproduce the live
+  engine byte-for-byte (``engine_fingerprint``) and answer an identical
+  ``match_many`` (``recovery_identity_ok``).
+* **bounded recovery** — snapshot + WAL-suffix replay must beat
+  rebuilding from scratch (partition + train + index + re-apply the
+  whole stream): ``recovery_bounded_ok`` gates ``recovery_s <
+  rebuild_s``.  With ``snapshot_every = 4`` the replay suffix is ≤ 4
+  epochs regardless of stream length — recovery cost is O(snapshot
+  interval), not O(history).
+
+CI runs this via benchmarks/compare.py (see SPECS there).
+"""
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import GraphUpdate
+from repro.durability import (
+    Durability,
+    DurabilityConfig,
+    engine_fingerprint,
+    engine_state,
+    recover_engine,
+    restore_engine,
+)
+from repro.durability.snapshot import _META_KEY
+
+from .common import artifact_path, build_engine, emit, make_graph, sample_queries
+
+EPOCHS = 10
+EDGES_PER_EPOCH = 4
+REPEATS = 3
+SNAPSHOT_EVERY = 4
+
+
+def _update_stream(g, rng) -> list[GraphUpdate]:
+    out = []
+    for _ in range(EPOCHS):
+        e = g.edge_array()
+        out.append(
+            GraphUpdate(
+                add_edges=rng.integers(0, g.n_vertices, size=(EDGES_PER_EPOCH, 2)),
+                remove_edges=e[rng.choice(e.shape[0], size=2, replace=False)],
+            )
+        )
+    return out
+
+
+def _clone(meta: dict, arrays: dict):
+    """Fresh replica from an in-memory snapshot (byte-identical start)."""
+    eng, _ = restore_engine({**arrays, _META_KEY: np.asarray(json.dumps(meta))})
+    return eng
+
+
+def run(full: bool = False, json_path: str | None = None) -> dict:
+    n = 4_000 if full else 2_000
+    g = make_graph(n=n, seed=11)
+    t0 = time.perf_counter()
+    eng = build_engine(g)
+    build_s = time.perf_counter() - t0
+    meta, arrays = engine_state(eng)
+    stream = _update_stream(g, np.random.default_rng(7))
+    queries = sample_queries(g, n=6, seed0=300)
+
+    # --- WAL tax: identical replicas, same stream, journal on vs off ----
+    t_plain = t_wal = float("inf")
+    for r in range(REPEATS):
+        plain = _clone(meta, arrays)
+        t0 = time.perf_counter()
+        for u in stream:
+            plain.apply_updates([u])
+        t_plain = min(t_plain, time.perf_counter() - t0)
+
+        walled = _clone(meta, arrays)
+        with tempfile.TemporaryDirectory() as d:
+            dur = Durability(DurabilityConfig(d, snapshot_every=0, genesis_snapshot=False))
+            t0 = time.perf_counter()
+            for u in stream:
+                dur.log_epoch(walled.epoch + 1, [u], "delta", "inline")
+                walled.apply_updates([u])
+                dur.after_apply(walled)
+            t_wal = min(t_wal, time.perf_counter() - t0)
+            wal_bytes = sum(p.stat().st_size for p in dur.wal.dir.glob("*.wal"))
+            dur.close()
+    overhead = t_wal / t_plain - 1.0
+
+    # --- recovery: snapshot-cadenced durable run, then recover ----------
+    with tempfile.TemporaryDirectory() as d:
+        live = _clone(meta, arrays)
+        dur = Durability(DurabilityConfig(d, snapshot_every=SNAPSHOT_EVERY))
+        dur.snapshot(live)  # genesis
+        for u in stream:
+            dur.log_epoch(live.epoch + 1, [u], "delta", "inline")
+            live.apply_updates([u])
+            dur.after_apply(live)
+        dur.close()
+
+        t0 = time.perf_counter()
+        recovered, info = recover_engine(DurabilityConfig(d, snapshot_every=SNAPSHOT_EVERY))
+        recovery_s = time.perf_counter() - t0
+        identity = engine_fingerprint(recovered) == engine_fingerprint(live) and (
+            recovered.match_many(queries) == live.match_many(queries)
+        )
+
+    # from-scratch alternative: rebuild offline stage + replay all epochs
+    t0 = time.perf_counter()
+    scratch = build_engine(g)
+    for u in stream:
+        scratch.apply_updates([u])
+    rebuild_s = time.perf_counter() - t0
+    del scratch
+    rebuild_s = max(rebuild_s, build_s * 0.5)  # guard against cached-build flukes
+
+    rec = {
+        "n_vertices": int(g.n_vertices),
+        "n_epochs": EPOCHS,
+        "snapshot_every": SNAPSHOT_EVERY,
+        "plain_apply_s": t_plain,
+        "wal_apply_s": t_wal,
+        "wal_overhead_frac": overhead,
+        "wal_overhead_ok": bool(overhead <= 0.10),
+        "wal_bytes": int(wal_bytes),
+        "recovery_s": recovery_s,
+        "replayed_epochs": int(info["replayed"]),
+        "snapshot_epoch": int(info["snapshot_epoch"]),
+        "rebuild_s": rebuild_s,
+        "recovery_bounded_ok": bool(recovery_s < rebuild_s),
+        "recovery_identity_ok": bool(identity),
+    }
+    emit(
+        "durability/wal_tax",
+        1e6 * t_wal,
+        f"overhead={overhead:+.1%} epochs={EPOCHS} wal_bytes={wal_bytes}",
+    )
+    emit(
+        "durability/recovery",
+        1e6 * recovery_s,
+        f"replayed={info['replayed']} identical={identity} rebuild={rebuild_s:.2f}s",
+    )
+    json_path = artifact_path("BENCH_durability.json", json_path)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    rec = run(full=args.full, json_path=args.json)
+    print(
+        f"# WAL tax {rec['wal_overhead_frac']:+.1%} (gate ≤ +10%); recovery "
+        f"{rec['recovery_s']:.2f}s vs rebuild {rec['rebuild_s']:.2f}s; "
+        f"identical={rec['recovery_identity_ok']}"
+    )

@@ -23,7 +23,7 @@ import time
 
 from repro.core.index import PAIR_COUNTERS, reset_pair_counters
 
-from .common import build_engine, emit, make_graph, sample_queries
+from .common import artifact_path, build_engine, emit, make_graph, sample_queries
 
 BATCH = 16
 GROUP_SIZE = 16
@@ -104,7 +104,7 @@ def run(full: bool = False, json_path: str | None = None) -> dict:
             sum(s["mean_members"] * s["n_groups"] for s in group_stats) / max(n_groups, 1)
         ),
     }
-    json_path = json_path or os.environ.get("BENCH_JSON")
+    json_path = artifact_path("BENCH_grouped.json", json_path)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rec, f, indent=1)

@@ -40,7 +40,7 @@ import time
 
 import numpy as np
 
-from .common import build_engine, emit, make_graph
+from .common import artifact_path, build_engine, emit, make_graph
 
 BATCH = 8  # isomorphic copies in the join-heavy batch
 N_VERTICES = 6000
@@ -206,7 +206,7 @@ def run(full: bool = False, json_path: str | None = None) -> dict:
         "device_join_ge_1_2x": ge_1_2x,
         "device_join_gate_ok": gate_ok,
     }
-    json_path = json_path or os.environ.get("BENCH_JSON")
+    json_path = artifact_path("BENCH_join.json", json_path)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rec, f, indent=1)

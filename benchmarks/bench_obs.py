@@ -41,7 +41,7 @@ from repro.obs import TRACER, disable, enable, parse_prometheus, to_prometheus, 
 from repro.obs.metrics import REGISTRY
 from repro.serve.match_server import MatchServeConfig, MatchServer
 
-from .common import build_engine, emit, make_graph, sample_queries
+from .common import artifact_path, build_engine, emit, make_graph, sample_queries
 
 ROUNDS = 10  # ticks per measured pass
 BATCH = 8
@@ -186,7 +186,7 @@ def run(full: bool = False, json_path: str | None = None) -> dict:
         "funnel_pruning_power": pruning,
         "n_traces_ringed": len(TRACER.recent()),
     }
-    json_path = json_path or os.environ.get("BENCH_JSON")
+    json_path = artifact_path("BENCH_obs.json", json_path)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rec, f, indent=1)

@@ -20,7 +20,7 @@ import os
 import time
 
 
-from .common import build_engine, emit, make_graph, sample_queries
+from .common import artifact_path, build_engine, emit, make_graph, sample_queries
 
 BATCH = 16
 
@@ -73,7 +73,7 @@ def run(full: bool = False, json_path: str | None = None) -> dict:
         "speedup": speedup,
         "match_sets_identical": True,
     }
-    json_path = json_path or os.environ.get("BENCH_JSON")
+    json_path = artifact_path("BENCH_online.json", json_path)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rec, f, indent=1)

@@ -38,7 +38,7 @@ from repro.serve.faults import FaultSpec, FlakyEngine
 from repro.serve.match_server import MatchServeConfig, MatchServer
 from repro.serve.service import MatchService, ServiceConfig
 
-from .common import build_engine, emit, make_graph, sample_queries
+from .common import artifact_path, build_engine, emit, make_graph, sample_queries
 
 BURST = 40  # plain-loop burst (capacity measurement)
 OVERLOAD_REQUESTS = 60
@@ -198,7 +198,7 @@ def run(full: bool = False, json_path: str | None = None) -> dict:
         "chaos_retry_exhausted": int(chaos["exhausted"]),
         "match_sets_identical": bool(chaos["identical"]),
     }
-    json_path = json_path or os.environ.get("BENCH_JSON")
+    json_path = artifact_path("BENCH_serving.json", json_path)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rec, f, indent=1)

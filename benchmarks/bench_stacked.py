@@ -30,7 +30,7 @@ import subprocess
 import sys
 import time
 
-from .common import build_engine, emit, make_graph, sample_queries
+from .common import artifact_path, build_engine, emit, make_graph, sample_queries
 
 BATCH = 16
 GROUP_SIZE = 16
@@ -198,7 +198,7 @@ def run(full: bool = False, json_path: str | None = None, scaling: bool = True) 
         "scaling_monotone": _monotone(curve) if curve else None,
         "scaling_tolerance": SCALING_TOLERANCE,
     }
-    json_path = json_path or os.environ.get("BENCH_JSON")
+    json_path = artifact_path("BENCH_stacked.json", json_path)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rec, f, indent=1)

@@ -30,7 +30,7 @@ from repro.core import GraphUpdate
 from repro.graphs import newman_watts_strogatz
 from repro.serve.standing import StandingQueryRegistry
 
-from .common import build_engine, emit, sample_queries
+from .common import artifact_path, build_engine, emit, sample_queries
 
 N_SUBS = 20
 EPOCHS = 8
@@ -118,7 +118,7 @@ def run(full: bool = False, json_path: str | None = None) -> dict:
         "n_refreshed": int(st["refreshed"]),
         "match_sets_identical": bool(identical),
     }
-    json_path = json_path or os.environ.get("BENCH_JSON")
+    json_path = artifact_path("BENCH_standing.json", json_path)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rec, f, indent=1)

@@ -36,7 +36,7 @@ from repro.core import GraphUpdate
 from repro.core.matcher import sort_matches
 from repro.serve.match_server import MatchServeConfig, MatchServer
 
-from .common import build_engine, emit, make_graph, sample_queries
+from .common import artifact_path, build_engine, emit, make_graph, sample_queries
 
 UPDATE_BATCHES = 6
 EDGES_PER_BATCH = 4
@@ -186,7 +186,7 @@ def run(full: bool = False, json_path: str | None = None) -> dict:
         "mixed_p95_ms": mixed_p95,
         "match_sets_identical": bool(identical),
     }
-    json_path = json_path or os.environ.get("BENCH_JSON")
+    json_path = artifact_path("BENCH_updates.json", json_path)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rec, f, indent=1)

@@ -7,13 +7,22 @@ minutes; ``--full`` restores paper scale.
 """
 from __future__ import annotations
 
+import os
 import time
 
 
 from repro.core import GnnPeConfig, GnnPeEngine, TrainConfig
 from repro.graphs import newman_watts_strogatz, random_connected_query
 
-__all__ = ["emit", "timed", "build_engine", "make_graph", "sample_queries", "DEFAULTS"]
+__all__ = [
+    "artifact_path",
+    "emit",
+    "timed",
+    "build_engine",
+    "make_graph",
+    "sample_queries",
+    "DEFAULTS",
+]
 
 # paper defaults (Table 3), scaled for CPU: |V(G)| 50K → 2K, runs 100 → 10
 DEFAULTS = dict(
@@ -31,6 +40,27 @@ DEFAULTS = dict(
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def artifact_path(default_name: str, json_path: str | None = None) -> str | None:
+    """Resolve where a bench writes its ``BENCH_*.json`` record.
+
+    Precedence: explicit ``json_path`` (the bench's ``--json`` flag) >
+    ``BENCH_JSON`` env (single-file override for one-off runs) >
+    ``BENCH_OUT_DIR`` env (set by ``run.py --out-dir``; the directory is
+    created and ``default_name`` is placed inside it) > ``None`` — no
+    artifact, so ad-hoc runs never scatter JSON into the source tree.
+    """
+    if json_path:
+        return json_path
+    env = os.environ.get("BENCH_JSON")
+    if env:
+        return env
+    out_dir = os.environ.get("BENCH_OUT_DIR")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        return os.path.join(out_dir, default_name)
+    return None
 
 
 def timed(fn, *args, repeats: int = 3, **kw):

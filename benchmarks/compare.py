@@ -131,6 +131,17 @@ SPECS = {
         "higher_is_better": [],
         "bool_true": ["overhead_under_5pct", "export_parse_ok"],
     },
+    # crash-safe durability: the WAL tax ceiling (≤10% over bare
+    # apply_updates, min-of-repeats) and the recovery bound (snapshot +
+    # WAL-suffix replay beats rebuild-from-scratch) gate as bench-computed
+    # booleans; recovery_identity_ok is the headline byte-identical
+    # restart contract (engine_fingerprint + match_many equality).
+    # wal_apply_s/recovery_s track absolute walls against the band.
+    "BENCH_durability.json": {
+        "lower_is_better": ["wal_apply_s", "recovery_s"],
+        "higher_is_better": [],
+        "bool_true": ["recovery_identity_ok", "wal_overhead_ok", "recovery_bounded_ok"],
+    },
 }
 DEFAULT_FILES = list(SPECS)
 

@@ -6,6 +6,7 @@ sizes (hours on this CPU container; default sizes finish in minutes).
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -14,10 +15,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None, help="substring filter on bench name")
+    ap.add_argument(
+        "--out-dir",
+        default=None,
+        help="directory for BENCH_*.json artifacts (sets BENCH_OUT_DIR; "
+        "without it no JSON is written unless BENCH_JSON names a file)",
+    )
     args = ap.parse_args()
+    if args.out_dir:
+        os.environ["BENCH_OUT_DIR"] = args.out_dir
 
     from . import (
         bench_cluster,
+        bench_durability,
         bench_graph_scaling,
         bench_grouped,
         bench_join,
@@ -44,6 +54,7 @@ def main() -> None:
         ("cluster", bench_cluster.run),
         ("join", bench_join.run),
         ("obs", bench_obs.run),
+        ("durability", bench_durability.run),
         ("fig8_pruning", bench_pruning.run),
         ("fig9_baselines", bench_vs_baselines.run),
         ("fig7_params", bench_params.run),

@@ -34,19 +34,32 @@ handle shed or quarantined) and that each subscription's accumulated
 delta replay is identical to a from-scratch match — the standing-query
 chaos smoke CI runs.
 
+``--wal DIR`` runs the durable tick loop (repro/durability): the server
+journals every update epoch to a checksummed fsync'd WAL under DIR and
+snapshots every ``--snapshot-every`` epochs.  The update stream is
+precomputed deterministically against a shadow graph, so a re-run over
+the same DIR *resumes* — recovery restores the newest valid snapshot,
+replays the WAL suffix, and the driver skips the epochs already applied.
+The run ends by printing the engine fingerprint + a match digest over a
+fixed query set: a SIGKILLed-and-restarted run must print the same line
+as one that never crashed (examples/chaos_crash.py drives exactly that).
+
     PYTHONPATH=src python examples/serve_queries.py [--n 4000] [--requests 60]
     PYTHONPATH=src python examples/serve_queries.py --update-every 5 --cache
     PYTHONPATH=src python examples/serve_queries.py --service --fault-rate 0.2
     PYTHONPATH=src python examples/serve_queries.py --service --subscribe \
         --update-every 3 --fault-rate 0.15
+    PYTHONPATH=src python examples/serve_queries.py --wal /tmp/dur --wal-updates 10
 """
 import argparse
 import asyncio
+import hashlib
+import json
 import time
 
 import numpy as np
 
-from repro.core import GnnPeConfig, GnnPeEngine, GraphUpdate, vf2_match
+from repro.core import GnnPeConfig, GnnPeEngine, GraphUpdate, apply_graph_update, vf2_match
 from repro.graphs import newman_watts_strogatz, random_connected_query
 from repro.obs import parse_prometheus, to_prometheus, write_json_snapshot
 from repro.serve.faults import FaultSpec, FlakyEngine
@@ -209,6 +222,77 @@ async def _run_service(engine, args, rng):
         _metrics_report(len(resps), service=True, json_path=args.metrics_json)
 
 
+def _run_wal(engine, g, args, rng):
+    """Durable tick loop: journal every epoch, snapshot on cadence, and
+    end with a state digest a restarted replica must reproduce."""
+    from repro.durability import (
+        DurabilityConfig,
+        RecoveryError,
+        engine_fingerprint,
+        recover_server,
+    )
+
+    dcfg = DurabilityConfig(args.wal, snapshot_every=args.snapshot_every)
+    try:
+        server, info = recover_server(dcfg, MatchServeConfig(max_batch=args.batch))
+        engine = server.engine
+        print(
+            f"[wal] recovered: snapshot epoch {info['snapshot_epoch']} + "
+            f"{info['replayed']} replayed WAL epochs → epoch {info['epoch']} "
+            f"({info['truncated_bytes']} torn-tail bytes dropped, "
+            f"{info['recovery_s']*1e3:.0f}ms)"
+        )
+    except RecoveryError:
+        # fresh directory: the seeded build is itself deterministic, so a
+        # pre-genesis crash just rebuilds the identical engine
+        server = MatchServer(engine, MatchServeConfig(max_batch=args.batch, durability=dcfg))
+        print("[wal] fresh directory: genesis snapshot at epoch 0")
+
+    # the update stream is a pure function of the args: evolve a shadow
+    # graph so update k is well-defined regardless of how many epochs the
+    # recovered engine already applied
+    shadow = g
+    updates = []
+    rng_u = np.random.default_rng(12345)
+    for _ in range(args.wal_updates):
+        e = shadow.edge_array()
+        u = GraphUpdate(
+            add_edges=rng_u.integers(0, shadow.n_vertices, size=(2, 2)),
+            remove_edges=e[rng_u.choice(e.shape[0], size=2, replace=False)],
+        )
+        updates.append(u)
+        shadow, _ = apply_graph_update(shadow, u)
+
+    start = int(engine.epoch)
+    assert start <= len(updates), f"directory is ahead of the stream ({start} epochs)"
+    for k in range(start, len(updates)):
+        try:
+            q = random_connected_query(g, 5, seed=3000 + k)
+            server.submit(q)
+            server.step()
+        except RuntimeError:
+            pass
+        server.submit_update(updates[k])
+        server.apply_update_tick()
+        print(f"[wal] epoch {k + 1}/{len(updates)}", flush=True)
+    server.run_until_drained()
+
+    probes = []
+    for i in range(6):
+        try:
+            probes.append(random_connected_query(g, 5 + i % 2, seed=4000 + i))
+        except RuntimeError:
+            continue
+    matches = engine.match_many(probes)
+    digest = hashlib.blake2b(
+        json.dumps([sorted(m) for m in matches]).encode(), digest_size=8
+    ).hexdigest()
+    print(
+        f"[wal] final epoch={engine.epoch} fingerprint={engine_fingerprint(engine)} "
+        f"match_digest={digest}"
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=4000)
@@ -275,6 +359,20 @@ def main():
         help="with --metrics: also write the registry snapshot as JSON "
         "to this path",
     )
+    ap.add_argument(
+        "--wal", default=None, metavar="DIR",
+        help="durable tick loop: WAL + snapshots under DIR; a re-run over "
+        "the same DIR recovers and resumes the deterministic update stream "
+        "(crash-recovery smoke — see examples/chaos_crash.py)",
+    )
+    ap.add_argument(
+        "--wal-updates", type=int, default=10,
+        help="with --wal: length of the deterministic update stream",
+    )
+    ap.add_argument(
+        "--snapshot-every", type=int, default=4,
+        help="with --wal: epochs between snapshots",
+    )
     args = ap.parse_args()
 
     g = newman_watts_strogatz(args.n, k=4, p=0.1, n_labels=50, seed=0)
@@ -306,6 +404,9 @@ def main():
           f"{engine.offline_stats['index_bytes']/1e6:.1f} MB index)")
 
     rng = np.random.default_rng(0)
+    if args.wal:
+        _run_wal(engine, g, args, rng)
+        return
     if args.service:
         asyncio.run(_run_service(engine, args, rng))
         return

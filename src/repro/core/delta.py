@@ -107,6 +107,26 @@ class GraphUpdate:
             or len(self.remove_vertices)
         )
 
+    # Exact array serialization (durability WAL): integer arrays with
+    # pinned dtypes, so encode→decode is a bit-exact roundtrip and a
+    # replayed epoch applies the identical update.
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        return {
+            "add_edges": np.asarray(self.add_edges, np.int64).reshape(-1, 2),
+            "remove_edges": np.asarray(self.remove_edges, np.int64).reshape(-1, 2),
+            "add_vertex_labels": np.asarray(self.add_vertex_labels, np.int32).reshape(-1),
+            "remove_vertices": np.asarray(self.remove_vertices, np.int64).reshape(-1),
+        }
+
+    @staticmethod
+    def from_arrays(arrays: dict) -> "GraphUpdate":
+        return GraphUpdate(
+            add_edges=np.asarray(arrays["add_edges"], np.int64).reshape(-1, 2),
+            remove_edges=np.asarray(arrays["remove_edges"], np.int64).reshape(-1, 2),
+            add_vertex_labels=np.asarray(arrays["add_vertex_labels"], np.int32).reshape(-1),
+            remove_vertices=np.asarray(arrays["remove_vertices"], np.int64).reshape(-1),
+        )
+
 
 def _norm_edges(edges: np.ndarray, n: int) -> np.ndarray:
     """(k, 2) int64 with u < v, self loops dropped, deduplicated."""

@@ -1,16 +1,28 @@
-"""Atomic, async, elastic checkpointing.
+"""Atomic, async, elastic, *verified* checkpointing.
 
-Layout: one ``step_<n>.npz`` per checkpoint under the manager's dir.
+Layout: one ``step_<n>.npz`` plus a ``step_<n>.manifest.json`` sidecar
+per checkpoint under the manager's dir.
 Atomicity: arrays are staged to ``*.tmp`` and ``os.replace``d into
-place, so a crash mid-write never leaves a readable-but-torn file.
+place; the manifest is written (same tmp/replace discipline) only
+*after* the npz is durable, then the directory is fsync'd — manifest
+presence is the commit point, so a crash mid-write never leaves a
+checkpoint that ``latest_step()`` would pick up.
+Verification: the manifest records the npz byte size, a whole-file
+sha256, and a per-leaf sha256/dtype/shape digest.  ``restore()``
+re-checks all of them and raises :class:`CorruptCheckpointError` on any
+mismatch; ``restore(step=None)``/``latest_step()`` simply skip invalid
+steps (torn, bit-flipped, or manifest-less) and fall back to the newest
+valid one.
 Elasticity: ``restore(template, shardings=...)`` re-lays leaves onto any
 target mesh via ``jax.device_put`` — the source topology is irrelevant
 because the serialized form is plain host arrays.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import re
 import threading
 from pathlib import Path
 
@@ -18,9 +30,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "CorruptCheckpointError"]
 
 _PREFIX = "step_"
+_MANIFEST_FORMAT = 1
+_DICT_KEY = re.compile(r"^\['([^']*)'\]$")
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint step failed manifest/digest verification."""
 
 
 def _flatten(tree):
@@ -31,6 +49,10 @@ def _flatten(tree):
     return keys, leaves, treedef
 
 
+def _leaf_digest(x: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(x).tobytes()).hexdigest()
+
+
 class CheckpointManager:
     def __init__(self, directory, keep: int = 3):
         self.dir = Path(directory)
@@ -38,10 +60,17 @@ class CheckpointManager:
         self.keep = keep
         self._thread: threading.Thread | None = None
         self._lock = threading.Lock()
+        # test/fault-injection hook: runs between the npz becoming durable
+        # and the manifest commit (the window a crash leaves an
+        # uncommitted — and therefore skipped — step)
+        self._pre_commit = None
 
     # ------------------------------------------------------------ paths ---
     def _path(self, step: int) -> Path:
         return self.dir / f"{_PREFIX}{step}.npz"
+
+    def _manifest_path(self, step: int) -> Path:
+        return self.dir / f"{_PREFIX}{step}.manifest.json"
 
     def all_steps(self) -> list[int]:
         steps = []
@@ -52,9 +81,46 @@ class CheckpointManager:
                 continue
         return sorted(steps)
 
+    def valid_steps(self) -> list[int]:
+        """Steps that pass manifest verification, ascending."""
+        out = []
+        for s in self.all_steps():
+            try:
+                self.verify_step(s)
+            except CorruptCheckpointError:
+                continue
+            out.append(s)
+        return out
+
     def latest_step(self) -> int | None:
-        steps = self.all_steps()
+        steps = self.valid_steps()
         return steps[-1] if steps else None
+
+    # ----------------------------------------------------------- verify ---
+    def verify_step(self, step: int) -> dict:
+        """Check manifest presence + whole-file digest; return the manifest.
+
+        Raises :class:`CorruptCheckpointError` on a missing step, missing
+        or unreadable manifest, size mismatch, or sha256 mismatch.
+        """
+        npz = self._path(step)
+        mpath = self._manifest_path(step)
+        if not npz.exists():
+            raise CorruptCheckpointError(f"step {step}: missing {npz.name}")
+        if not mpath.exists():
+            raise CorruptCheckpointError(f"step {step}: uncommitted (no manifest)")
+        try:
+            manifest = json.loads(mpath.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            raise CorruptCheckpointError(f"step {step}: unreadable manifest: {e}") from e
+        data = npz.read_bytes()
+        if len(data) != manifest.get("size"):
+            raise CorruptCheckpointError(
+                f"step {step}: size {len(data)} != manifest {manifest.get('size')}"
+            )
+        if hashlib.sha256(data).hexdigest() != manifest.get("sha256"):
+            raise CorruptCheckpointError(f"step {step}: file sha256 mismatch")
+        return manifest
 
     # ------------------------------------------------------------- save ---
     def save(self, step: int, state) -> None:
@@ -81,7 +147,35 @@ class CheckpointManager:
             np.savez(f, **arrays)
             f.flush()
             os.fsync(f.fileno())
+        data = tmp.read_bytes()
         os.replace(tmp, final)
+        if self._pre_commit is not None:
+            self._pre_commit()
+        manifest = {
+            "format": _MANIFEST_FORMAT,
+            "step": int(step),
+            "npz": final.name,
+            "size": len(data),
+            "sha256": hashlib.sha256(data).hexdigest(),
+            "leaves": {
+                k: {"sha256": _leaf_digest(x), "dtype": str(x.dtype), "shape": list(x.shape)}
+                for k, x in zip(keys, host)
+            },
+        }
+        mfinal = self._manifest_path(step)
+        mtmp = mfinal.with_suffix(mfinal.suffix + ".tmp")
+        with open(mtmp, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(mtmp, mfinal)
+        # dir fsync pins both renames — after this, the step survives a
+        # power cut; before it, verify_step() treats the step as absent
+        dfd = os.open(self.dir, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
         self._gc()
 
     def wait(self) -> None:
@@ -93,28 +187,68 @@ class CheckpointManager:
     def _gc(self) -> None:
         steps = self.all_steps()
         for s in steps[: -self.keep] if self.keep else []:
-            try:
-                self._path(s).unlink()
-            except FileNotFoundError:
-                pass
+            for p in (self._path(s), self._manifest_path(s)):
+                try:
+                    p.unlink()
+                except FileNotFoundError:
+                    pass
 
-    # ---------------------------------------------------------- restore ---
+    # ------------------------------------------------------------- load ---
+    def _load_verified(self, step: int) -> tuple[list, list]:
+        """(keys, arrays) of a step, after whole-file + per-leaf checks."""
+        manifest = self.verify_step(step)
+        with np.load(self._path(step)) as z:
+            saved_keys = json.loads(str(z["__keys__"]))
+            saved = [z[f"arr_{i}"] for i in range(len(saved_keys))]
+        want = manifest.get("leaves", {})
+        if sorted(want) != sorted(saved_keys):
+            raise CorruptCheckpointError(f"step {step}: leaf keys differ from manifest")
+        for k, arr in zip(saved_keys, saved):
+            rec = want[k]
+            if str(arr.dtype) != rec["dtype"] or list(arr.shape) != rec["shape"]:
+                raise CorruptCheckpointError(f"step {step}: leaf {k} dtype/shape mismatch")
+            if _leaf_digest(arr) != rec["sha256"]:
+                raise CorruptCheckpointError(f"step {step}: leaf {k} digest mismatch")
+        return saved_keys, saved
+
+    def _resolve_step(self, step: int | None) -> tuple[int, list, list]:
+        if step is not None:
+            keys, saved = self._load_verified(int(step))
+            return int(step), keys, saved
+        for s in reversed(self.all_steps()):
+            try:
+                keys, saved = self._load_verified(s)
+                return s, keys, saved
+            except CorruptCheckpointError:
+                continue
+        raise FileNotFoundError(f"no valid checkpoints under {self.dir}")
+
+    def restore_arrays(self, step: int | None = None) -> tuple[dict, int]:
+        """Verified load → ``({key: np.ndarray}, step)``, no template needed.
+
+        Single-level dict keystrs (``['name']``) are unwrapped back to
+        plain names, so a flat-dict ``save()`` roundtrips symmetrically.
+        """
+        self.wait()
+        step, keys, saved = self._resolve_step(step)
+        out = {}
+        for k, arr in zip(keys, saved):
+            m = _DICT_KEY.match(k)
+            out[m.group(1) if m else k] = arr
+        return out, step
+
     def restore(self, template, step: int | None = None, shardings=None):
         """Load a checkpoint into ``template``'s tree structure.
 
         ``shardings``: optional tree (matching ``template``) of
         ``jax.sharding.Sharding`` — each restored leaf is ``device_put``
         onto it (the elastic path: target mesh ≠ source mesh).
-        Returns ``(restored_tree, step)``.
+        Returns ``(restored_tree, step)``.  An explicit ``step`` that
+        fails verification raises :class:`CorruptCheckpointError`;
+        ``step=None`` skips invalid steps.
         """
         self.wait()
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {self.dir}")
-        with np.load(self._path(step)) as z:
-            saved_keys = json.loads(str(z["__keys__"]))
-            saved = [z[f"arr_{i}"] for i in range(len(saved_keys))]
+        step, saved_keys, saved = self._resolve_step(step)
         keys, leaves, treedef = _flatten(template)
         if keys != saved_keys:
             raise ValueError(

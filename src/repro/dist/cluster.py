@@ -47,6 +47,7 @@ back to single-process local mode when it cannot.
 
 from __future__ import annotations
 
+import io
 import json
 import os
 import time
@@ -153,33 +154,56 @@ class LocalHost:
 
 class DirExchange:
     """Shared-directory blob exchange — the 2-process smoke's data
-    plane.  Writes stage to a tmp file and ``os.replace`` into place
-    (the CheckpointManager discipline), so a polling reader never sees
-    a torn npz; blobs are ``{json meta, named arrays}``."""
+    plane.  Writes stage to a tmp file, fsync, ``os.replace`` into
+    place, then fsync the *directory* (the durable-rename contract: the
+    replace itself is atomic against concurrent readers, but only the
+    dir fsync pins the name→inode update across a power cut — without
+    it a crashed writer can reboot into a directory where the blob it
+    acknowledged never existed).  Blobs are CRC-framed npz payloads
+    (durability/wal.py framing): a reader that races bit rot or a
+    truncated copy gets a typed rejection up front instead of an
+    arbitrary failure mid-``np.load``."""
 
     def __init__(self, root):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
 
     def put(self, key: str, meta: dict | None = None, arrays: dict | None = None) -> None:
+        from ..durability.wal import frame_payload
+
         payload = {f"a_{k}": np.asarray(v) for k, v in (arrays or {}).items()}
         payload["__meta__"] = np.asarray(json.dumps(meta or {}))
+        buf = io.BytesIO()
+        np.savez(buf, **payload)
         final = self.root / f"{key}.npz"
         tmp = final.with_suffix(final.suffix + f".tmp{os.getpid()}")
         with open(tmp, "wb") as f:
-            np.savez(f, **payload)
+            f.write(frame_payload(buf.getvalue()))
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, final)
+        dfd = os.open(self.root, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
 
     def get(self, key: str, timeout: float = 60.0, poll: float = 0.01):
+        from ..durability.wal import CorruptRecordError, unframe_payload
+
         final = self.root / f"{key}.npz"
         deadline = time.monotonic() + timeout
         while not final.exists():
             if time.monotonic() > deadline:
                 raise HostLostError(f"timed out waiting for {key}")
             time.sleep(poll)
-        with np.load(final, allow_pickle=False) as z:
+        try:
+            blob = unframe_payload(final.read_bytes())
+        except CorruptRecordError as e:
+            # a torn/corrupt blob means the peer (or its disk) is gone —
+            # surface it as the host-loss the coordinator already heals
+            raise HostLostError(f"corrupt exchange blob {key}: {e}") from e
+        with np.load(io.BytesIO(blob), allow_pickle=False) as z:
             meta = json.loads(str(z["__meta__"]))
             arrays = {k[2:]: z[k] for k in z.files if k.startswith("a_")}
         return meta, arrays
@@ -322,6 +346,7 @@ class ClusterEngine:
         hosts: list | None = None,
         cache_capacity: int = 0,
         weights: tuple = DEFAULT_WEIGHTS,
+        durability=None,
     ):
         if hosts is None:
             hosts = [LocalHost(h, engine) for h in range(max(int(n_hosts or 1), 1))]
@@ -331,6 +356,20 @@ class ClusterEngine:
         self.hosts = list(hosts)
         self.weights = weights
         self.placement = None
+        # coordinator-side durability: the coordinator owns the engine, so
+        # it journals the update stream exactly like a MatchServer would
+        self.durability = None
+        if durability is not None:
+            from ..durability.manager import Durability
+
+            self.durability = (
+                durability if isinstance(durability, Durability) else Durability(durability)
+            )
+            if (
+                self.durability.cfg.genesis_snapshot
+                and self.durability.snapshots.latest_epoch() is None
+            ):
+                self.durability.snapshot(engine)
         self.cache = (
             ShardedResultCache(len(self.hosts), cache_capacity) if cache_capacity else None
         )
@@ -600,7 +639,18 @@ class ClusterEngine:
         sharded cache so evictions stay on the mutated partitions' owner
         shards.  (Process mode: every process applies the same update
         stream — deterministic replicas stay identical.)"""
+        if self.durability is not None:
+            if not isinstance(updates, (list, tuple)):
+                updates = [updates]
+            self.durability.log_epoch(
+                self.engine.epoch + 1,
+                list(updates),
+                kw.get("strategy", "delta"),
+                kw.get("compaction", "inline"),
+            )
         summary = self.engine.apply_updates(updates, **kw)
+        if self.durability is not None:
+            self.durability.after_apply(self.engine)
         if self.cache is not None:
             last = self.engine.epoch_fresh() or {}
             if last.get("strategy") == "rebuild":
@@ -643,6 +693,40 @@ class ClusterEngine:
                 installed=False,
             )
         return {"generation": int(snap["generation"]), "installed": False}
+
+    def load_generation(self, store, generation: int | None = None) -> dict:
+        """Verified read-back of persisted generation artifacts.
+
+        ``store.restore_arrays`` runs the digest-manifest verification
+        (dist/checkpoint.py) — a torn or bit-flipped artifact raises
+        ``CorruptCheckpointError`` instead of installing a wrong index;
+        ``generation=None`` falls back to the newest *valid* step.  The
+        arrays re-pack through ``build_index`` exactly as
+        ``_generation_artifacts`` promises → ``{"generation", "indexes"}``.
+        """
+        from ..core.grouping import attach_groups
+        from ..core.index import build_index
+
+        arrays, gen = store.restore_arrays(generation)
+        eng = self.engine
+        indexes = []
+        for mi, m in enumerate(eng.models):
+            paths = np.asarray(arrays[f"p{mi}_paths"], np.int32)
+            quantize = m.index.emb_q is not None
+            ix = build_index(
+                paths,
+                np.asarray(arrays[f"p{mi}_emb"], np.float32),
+                np.asarray(arrays[f"p{mi}_emb0"], np.float32),
+                np.asarray(arrays[f"p{mi}_emb_multi"], np.float32),
+                block_size=m.index.block_size,
+                fanout=m.index.fanout,
+                quantize=quantize,
+                path_labels=eng.graph.labels[paths] if quantize and paths.size else None,
+            )
+            if m.index.groups is not None:
+                attach_groups(ix, m.index.groups.group_size)
+            indexes.append(ix)
+        return {"generation": int(gen), "indexes": indexes}
 
     # ------------------------------------------------------------- status --
     def cluster_stats(self) -> dict:

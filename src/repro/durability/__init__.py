@@ -1,0 +1,59 @@
+"""Crash-safe durability: WAL, verified snapshots, byte-identical recovery.
+
+* :mod:`repro.durability.wal` — checksummed, fsync'd write-ahead log for
+  the update stream (CRC32 + length framing, segment rotation,
+  torn-tail truncation on open).
+* :mod:`repro.durability.snapshot` — periodic full-engine snapshots
+  through the digest-manifest-verified ``dist/checkpoint.py``.
+* :mod:`repro.durability.recovery` — newest valid snapshot + WAL-suffix
+  replay ⇒ a restarted server byte-identical to one that never crashed.
+* :mod:`repro.durability.scrub` — invariant auditor (MBR/group bounds,
+  tombstone/delta consistency vs a fresh enumerate), offline or as a
+  server admin call.
+* :mod:`repro.durability.faults` — crash-injection kill points and
+  corruption helpers for the identity sweep.
+"""
+from .faults import CrashPoint, SimulatedCrash, flip_byte, truncate_tail
+from .manager import Durability, DurabilityConfig
+from .recovery import RecoveryError, recover_engine, recover_engine_from_dir, recover_server
+from .scrub import scrub_engine
+from .snapshot import (
+    SnapshotIntegrityError,
+    SnapshotStore,
+    engine_fingerprint,
+    engine_state,
+    restore_engine,
+)
+from .wal import (
+    CorruptRecordError,
+    CorruptWalError,
+    WalRecord,
+    WriteAheadLog,
+    frame_payload,
+    unframe_payload,
+)
+
+__all__ = [
+    "CrashPoint",
+    "SimulatedCrash",
+    "flip_byte",
+    "truncate_tail",
+    "Durability",
+    "DurabilityConfig",
+    "RecoveryError",
+    "recover_engine",
+    "recover_engine_from_dir",
+    "recover_server",
+    "scrub_engine",
+    "SnapshotIntegrityError",
+    "SnapshotStore",
+    "engine_fingerprint",
+    "engine_state",
+    "restore_engine",
+    "CorruptRecordError",
+    "CorruptWalError",
+    "WalRecord",
+    "WriteAheadLog",
+    "frame_payload",
+    "unframe_payload",
+]

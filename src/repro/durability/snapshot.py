@@ -1,0 +1,367 @@
+"""Periodic engine snapshots through the verified ``CheckpointManager``.
+
+A snapshot is the engine's *complete* live state flattened to exact
+host arrays — graph CSR, partitioning, GNN params, node embeddings,
+per-partition ``PackedIndex`` payloads, and the full delta state
+(tombstones + unsorted buffers) — plus a JSON meta leaf carrying the
+engine config, epoch, fingerprint, and the serving tier's standing
+subscriptions.  Restore reconstructs the packed forests by running the
+saved (already-sorted) leaf payloads back through ``build_index`` — the
+stable lexsort is the identity on sorted input, so the rebuilt index is
+bit-identical (verified at restore; the GNN-PGE group sidecar is
+serialized directly).  Steps are keyed by delta epoch; the manifest +
+digest verification and newest-*valid*-step fallback all come from
+``dist/checkpoint.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.delta import DeltaIndex
+from ..core.engine import GnnPeConfig, GnnPeEngine, PartitionModel
+from ..core.index import PackedGroupIndex, build_index
+from ..core.training import TrainConfig
+from ..dist.checkpoint import CheckpointManager, CorruptCheckpointError
+from ..graphs.graph import Graph
+from ..graphs.partition import Partitioning
+from ..obs import REGISTRY
+
+__all__ = [
+    "SnapshotStore",
+    "engine_state",
+    "restore_engine",
+    "engine_fingerprint",
+    "SnapshotIntegrityError",
+]
+
+_META_KEY = "__snap_meta__"
+_FORMAT = 1
+
+_M_SNAP_S = REGISTRY.histogram("gnnpe_snapshot_seconds", "engine snapshot wall time")
+_M_SNAP_BYTES = REGISTRY.gauge("gnnpe_snapshot_bytes", "array bytes in the last snapshot")
+_M_SNAPSHOTS = REGISTRY.counter("gnnpe_snapshot_total", "engine snapshots written")
+
+
+class SnapshotIntegrityError(RuntimeError):
+    """Restored state failed a self-check (index reconstruction drifted)."""
+
+
+def _jsonable(x):
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    return x
+
+
+# ---------------------------------------------------------------- flatten --
+
+
+def engine_state(engine: GnnPeEngine, subscriptions: dict | None = None):
+    """Flatten a built engine → ``(meta, {key: np.ndarray})``.
+
+    ``subscriptions``: optional ``{sub_id: (query_graph, tenant)}`` live
+    standing-query table — snapshotted alongside so WAL segments older
+    than the snapshot can be pruned without losing registrations.
+    """
+    g = engine.graph
+    arrays: dict[str, np.ndarray] = {
+        "graph/offsets": np.asarray(g.offsets, np.int64),
+        "graph/nbrs": np.asarray(g.nbrs, np.int32),
+        "graph/labels": np.asarray(g.labels, np.int32),
+        "part/assignment": np.asarray(engine.partitioning.assignment, np.int32),
+        "label_perms": np.asarray(engine.label_perms, np.int64),
+        "plp": np.asarray(engine._part_leaf_pairs, np.int64),
+        "ppr": np.asarray(engine._part_probe_rows, np.int64),
+    }
+    models_meta = []
+    for i, m in enumerate(engine.models):
+        p = f"m{i}/"
+        arrays[p + "members"] = np.asarray(m.members, np.int32)
+        arrays[p + "vertex_set"] = np.asarray(m.vertex_set)
+        arrays[p + "node_emb"] = np.asarray(m.node_emb, np.float32)
+        arrays[p + "node_emb0"] = np.asarray(m.node_emb0, np.float32)
+        arrays[p + "node_emb_multi"] = np.asarray(m.node_emb_multi, np.float32)
+        arrays[p + "fbv"] = np.asarray(m.fallback_vids, np.int64)
+        for j, fb in enumerate(m.fallback_vids_multi):
+            arrays[p + f"fbm{j}"] = np.asarray(fb, np.int64)
+        for k, v in m.params.items():
+            arrays[p + f"param/{k}"] = np.asarray(v)
+        for j, mp in enumerate(m.multi_params):
+            for k, v in mp.items():
+                arrays[p + f"mparam{j}/{k}"] = np.asarray(v)
+        ix = m.index
+        arrays[p + "ix/paths"] = np.asarray(ix.paths, np.int32)
+        arrays[p + "ix/emb"] = np.asarray(ix.emb, np.float32)
+        arrays[p + "ix/emb0"] = np.asarray(ix.emb0, np.float32)
+        arrays[p + "ix/emb_multi"] = np.asarray(ix.emb_multi, np.float32)
+        if ix.groups is not None:
+            arrays[p + "gx/group_start"] = np.asarray(ix.groups.group_start, np.int64)
+            arrays[p + "gx/mbr_hi"] = np.asarray(ix.groups.mbr_hi)
+            arrays[p + "gx/mbr0"] = np.asarray(ix.groups.mbr0)
+            arrays[p + "gx/block_group_start"] = np.asarray(
+                ix.groups.block_group_start, np.int64
+            )
+        dp = engine.delta.parts[i]
+        arrays[f"d{i}/tombstone"] = np.asarray(dp.tombstone, bool)
+        arrays[f"d{i}/paths"] = np.asarray(dp.paths, np.int32)
+        arrays[f"d{i}/emb"] = np.asarray(dp.emb, np.float32)
+        arrays[f"d{i}/emb0"] = np.asarray(dp.emb0, np.float32)
+        arrays[f"d{i}/emb_multi"] = np.asarray(dp.emb_multi, np.float32)
+        if dp.emb_q is not None:
+            arrays[f"d{i}/emb_q"] = np.asarray(dp.emb_q, np.int8)
+        if dp.label_hash is not None:
+            arrays[f"d{i}/label_hash"] = np.asarray(dp.label_hash, np.int64)
+        models_meta.append(
+            {
+                "part_id": int(m.part_id),
+                "train_epochs": int(m.train_epochs),
+                "n_fallback": int(m.n_fallback),
+                "n_multi": len(m.multi_params),
+                "param_keys": sorted(m.params.keys()),
+                "mparam_keys": [sorted(mp.keys()) for mp in m.multi_params],
+                "block_size": int(ix.block_size),
+                "fanout": int(ix.fanout),
+                "quantize": ix.emb_q is not None,
+                "group_size": int(ix.groups.group_size) if ix.groups is not None else None,
+                "n_tomb": int(dp.n_tomb),
+                "version": int(dp.version),
+            }
+        )
+    subs_meta = []
+    for sid in sorted(subscriptions or {}):
+        q, tenant = subscriptions[sid]
+        subs_meta.append({"id": int(sid), "tenant": str(tenant)})
+        arrays[f"sub{sid}/offsets"] = np.asarray(q.offsets, np.int64)
+        arrays[f"sub{sid}/nbrs"] = np.asarray(q.nbrs, np.int32)
+        arrays[f"sub{sid}/labels"] = np.asarray(q.labels, np.int32)
+    meta = {
+        "format": _FORMAT,
+        "config": _jsonable(dataclasses.asdict(engine.cfg)),
+        "epoch": int(engine.epoch),
+        "n_labels": int(engine.n_labels),
+        "fingerprint": engine._emb_fingerprint.hex(),
+        "models": models_meta,
+        "delta_epoch": int(engine.delta.epoch),
+        "n_compactions": int(engine.delta.n_compactions),
+        "pending_compaction": sorted(int(i) for i in engine._pending_compaction),
+        "offline_stats": _jsonable(engine.offline_stats),
+        "subscriptions": subs_meta,
+    }
+    return meta, arrays
+
+
+def _config_from_dict(d: dict) -> GnnPeConfig:
+    d = dict(d)
+    train = d.pop("train", {})
+    return GnnPeConfig(train=TrainConfig(**train), **d)
+
+
+def restore_engine(arrays: dict) -> tuple[GnnPeEngine, dict]:
+    """Rebuild a live engine from a snapshot's array dict → ``(engine, meta)``.
+
+    Self-contained: the config rides in the meta leaf, so recovery needs
+    nothing but the durability directory.
+    """
+    meta = json.loads(str(arrays[_META_KEY]))
+    cfg = _config_from_dict(meta["config"])
+    eng = GnnPeEngine(cfg)
+    g = Graph(
+        offsets=np.asarray(arrays["graph/offsets"], np.int64),
+        nbrs=np.asarray(arrays["graph/nbrs"], np.int32),
+        labels=np.asarray(arrays["graph/labels"], np.int32),
+    )
+    eng.graph = g
+    eng.n_labels = int(meta["n_labels"])
+    eng.partitioning = Partitioning(
+        assignment=np.asarray(arrays["part/assignment"], np.int32),
+        n_parts=len(meta["models"]),
+    )
+    eng.label_perms = np.asarray(arrays["label_perms"], np.int64)
+    eng.models = []
+    indexes = []
+    for i, mm in enumerate(meta["models"]):
+        p = f"m{i}/"
+        paths = np.asarray(arrays[p + "ix/paths"], np.int32)
+        emb = np.asarray(arrays[p + "ix/emb"], np.float32)
+        emb0 = np.asarray(arrays[p + "ix/emb0"], np.float32)
+        emb_multi = np.asarray(arrays[p + "ix/emb_multi"], np.float32)
+        index = build_index(
+            paths,
+            emb,
+            emb0,
+            emb_multi,
+            block_size=mm["block_size"],
+            fanout=mm["fanout"],
+            quantize=mm["quantize"],
+            path_labels=g.labels[paths] if mm["quantize"] and paths.size else None,
+        )
+        # the saved payload is in sorted order, so the stable lexsort must
+        # be the identity — anything else means the reconstruction drifted
+        if not (
+            np.array_equal(index.paths, paths)
+            and np.array_equal(index.emb, emb)
+            and np.array_equal(index.emb0, emb0)
+            and np.array_equal(index.emb_multi, emb_multi)
+        ):
+            raise SnapshotIntegrityError(
+                f"partition {i}: index reconstruction is not bit-identical"
+            )
+        if mm["group_size"] is not None:
+            index.groups = PackedGroupIndex(
+                group_start=np.asarray(arrays[p + "gx/group_start"], np.int64),
+                mbr_hi=np.asarray(arrays[p + "gx/mbr_hi"]),
+                mbr0=np.asarray(arrays[p + "gx/mbr0"]),
+                block_group_start=np.asarray(arrays[p + "gx/block_group_start"], np.int64),
+                group_size=int(mm["group_size"]),
+            )
+        indexes.append(index)
+        eng.models.append(
+            PartitionModel(
+                members=np.asarray(arrays[p + "members"], np.int32),
+                vertex_set=np.asarray(arrays[p + "vertex_set"]),
+                params={k: jnp.asarray(arrays[p + f"param/{k}"]) for k in mm["param_keys"]},
+                multi_params=[
+                    {k: jnp.asarray(arrays[p + f"mparam{j}/{k}"]) for k in keys}
+                    for j, keys in enumerate(mm["mparam_keys"])
+                ],
+                label_perms=eng.label_perms,
+                node_emb=np.asarray(arrays[p + "node_emb"], np.float32),
+                node_emb0=np.asarray(arrays[p + "node_emb0"], np.float32),
+                node_emb_multi=np.asarray(arrays[p + "node_emb_multi"], np.float32),
+                index=index,
+                train_epochs=int(mm["train_epochs"]),
+                n_fallback=int(mm["n_fallback"]),
+                part_id=int(mm["part_id"]),
+                fallback_vids=np.asarray(arrays[p + "fbv"], np.int64),
+                fallback_vids_multi=[
+                    np.asarray(arrays[p + f"fbm{j}"], np.int64)
+                    for j in range(mm["n_multi"])
+                ],
+            )
+        )
+    eng.delta = DeltaIndex(indexes)
+    for i, mm in enumerate(meta["models"]):
+        dp = eng.delta.parts[i]
+        # copy: the engine ORs into this mask in place (tombstone_touched),
+        # and the source array may be shared (in-memory clone) or read-only
+        # (npz-backed) — either way aliasing it would corrupt the donor
+        dp.tombstone = np.array(arrays[f"d{i}/tombstone"], bool, copy=True)
+        dp.paths = np.asarray(arrays[f"d{i}/paths"], np.int32)
+        dp.emb = np.asarray(arrays[f"d{i}/emb"], np.float32)
+        dp.emb0 = np.asarray(arrays[f"d{i}/emb0"], np.float32)
+        dp.emb_multi = np.asarray(arrays[f"d{i}/emb_multi"], np.float32)
+        dp.emb_q = (
+            np.asarray(arrays[f"d{i}/emb_q"], np.int8) if f"d{i}/emb_q" in arrays else None
+        )
+        dp.label_hash = (
+            np.asarray(arrays[f"d{i}/label_hash"], np.int64)
+            if f"d{i}/label_hash" in arrays
+            else None
+        )
+        dp.n_tomb = int(mm["n_tomb"])
+        dp.version = int(mm["version"])
+    eng.delta.epoch = int(meta["delta_epoch"])
+    eng.delta.n_compactions = int(meta["n_compactions"])
+    eng.epoch = int(meta["epoch"])
+    eng._emb_fingerprint = bytes.fromhex(meta["fingerprint"])
+    eng._pending_compaction = set(meta["pending_compaction"])
+    eng.offline_stats = meta["offline_stats"]
+    # copied for the same reason as the tombstone mask: probe telemetry
+    # accumulates into these with in-place +=
+    eng._part_leaf_pairs = np.array(arrays["plp"], np.int64, copy=True)
+    eng._part_probe_rows = np.array(arrays["ppr"], np.int64, copy=True)
+    return eng, meta
+
+
+def restore_subscriptions(meta: dict, arrays: dict) -> dict:
+    """``{sub_id: (query_graph, tenant)}`` from a snapshot's state."""
+    out = {}
+    for s in meta.get("subscriptions", []):
+        sid = int(s["id"])
+        out[sid] = (
+            Graph(
+                offsets=np.asarray(arrays[f"sub{sid}/offsets"], np.int64),
+                nbrs=np.asarray(arrays[f"sub{sid}/nbrs"], np.int32),
+                labels=np.asarray(arrays[f"sub{sid}/labels"], np.int32),
+            ),
+            s["tenant"],
+        )
+    return out
+
+
+def engine_fingerprint(engine: GnnPeEngine) -> str:
+    """Content digest of everything match-relevant — two engines with
+    equal fingerprints return identical matches (and match order).
+
+    Telemetry (probe counters, offline timings) is excluded: a replica
+    that served reads diverges there without any bearing on state.
+    """
+    meta, arrays = engine_state(engine)
+    h = hashlib.blake2b(digest_size=16)
+    for k in sorted(arrays):
+        if k in ("plp", "ppr"):
+            continue
+        x = np.ascontiguousarray(arrays[k])
+        h.update(k.encode())
+        h.update(str(x.dtype).encode())
+        h.update(np.asarray(x.shape, np.int64).tobytes())
+        h.update(x.tobytes())
+    stable = {
+        "epoch": meta["epoch"],
+        "fingerprint": meta["fingerprint"],
+        "delta_epoch": meta["delta_epoch"],
+        "n_compactions": meta["n_compactions"],
+        "pending": meta["pending_compaction"],
+        "models": [
+            {k: mm[k] for k in ("n_tomb", "version", "group_size", "quantize")}
+            for mm in meta["models"]
+        ],
+    }
+    h.update(json.dumps(stable, sort_keys=True).encode())
+    return h.hexdigest()
+
+
+# ------------------------------------------------------------------ store --
+
+
+class SnapshotStore:
+    """Engine snapshots keyed by delta epoch, verified on both ends."""
+
+    def __init__(self, directory, keep: int = 3):
+        self.mgr = CheckpointManager(directory, keep=keep)
+
+    def save(self, engine: GnnPeEngine, subscriptions: dict | None = None) -> int:
+        t0 = time.perf_counter()
+        meta, arrays = engine_state(engine, subscriptions)
+        state = {_META_KEY: np.asarray(json.dumps(meta)), **arrays}
+        step = int(engine.epoch)
+        self.mgr.save(step, state)
+        _M_SNAP_S.observe(time.perf_counter() - t0)
+        _M_SNAP_BYTES.set(sum(a.nbytes for a in arrays.values()))
+        _M_SNAPSHOTS.inc()
+        return step
+
+    def latest_epoch(self) -> int | None:
+        return self.mgr.latest_step()
+
+    def load(self, step: int | None = None):
+        """→ ``(engine, meta, arrays, epoch)``; ``step=None`` falls back to
+        the newest snapshot that passes manifest verification."""
+        arrays, got = self.mgr.restore_arrays(step)
+        engine, meta = restore_engine(arrays)
+        if int(meta["epoch"]) != int(got):
+            raise CorruptCheckpointError(
+                f"snapshot step {got} carries epoch {meta['epoch']}"
+            )
+        return engine, meta, arrays, int(got)

@@ -126,6 +126,13 @@ class MatchServeConfig:
     # update_summaries) — a long-running server keeps the latest N while
     # the obs registry histograms carry the full cumulative history
     stats_maxlen: int = 1024
+    # crash-safe durability (durability/): a ``DurabilityConfig`` (or a
+    # pre-opened ``Durability``, e.g. from recovery) arms the update-
+    # stream WAL + periodic snapshots: every update tick journals its
+    # epoch BEFORE applying it, subscriptions are journaled too, and
+    # ``durability.recover_server`` rebuilds an identical server after a
+    # crash.  None = in-memory only (the historical behavior)
+    durability: object | None = None
 
 
 @dataclasses.dataclass
@@ -166,6 +173,24 @@ class MatchServer:
         # wake-on-submit: a driving loop parks on wait_for_work() instead
         # of spinning step() against two empty queues
         self._wake = threading.Event()
+        # durability: accept a config (fresh start) or a live manager
+        # (recovery hands over the one it replayed from)
+        self.durability = None
+        if cfg.durability is not None:
+            from ..durability.manager import Durability, DurabilityConfig
+
+            self.durability = (
+                cfg.durability
+                if isinstance(cfg.durability, Durability)
+                else Durability(cfg.durability)
+            )
+            if (
+                self.durability.cfg.genesis_snapshot
+                and self.durability.snapshots.latest_epoch() is None
+            ):
+                # genesis snapshot: recovery needs a base state even if the
+                # process dies before the first snapshot cadence fires
+                self.durability.snapshot(self.engine)
 
     # ------------------------------------------------------------- API ----
     def submit(self, query) -> int:
@@ -219,10 +244,38 @@ class MatchServer:
             self.registry = StandingQueryRegistry(self.engine)
         sub_id, initial = self.registry.register(query, callback=callback, tenant=tenant)
         self.match_deltas[sub_id] = [initial]
+        if self.durability is not None:
+            self.durability.log_subscribe(sub_id, query, tenant)
         return sub_id
 
+    def resubscribe(self, sub_id: int, query, callback=None, tenant: str = "") -> None:
+        """Crash-recovery re-registration under the original id (see
+        ``durability.recovery.recover_server``).  Takes the full-refresh
+        rung exactly once — the initial delta is the complete current
+        match set — and is NOT re-journaled: the subscription is already
+        durable (snapshot table or a surviving WAL record)."""
+        if self.registry is None:
+            from .standing import StandingQueryRegistry
+
+            self.registry = StandingQueryRegistry(self.engine)
+        sid, initial = self.registry.register(
+            query, callback=callback, tenant=tenant, sub_id=sub_id
+        )
+        self.match_deltas[sid] = [initial]
+
     def unsubscribe(self, sub_id: int) -> bool:
-        return self.registry is not None and self.registry.unregister(sub_id)
+        ok = self.registry is not None and self.registry.unregister(sub_id)
+        if ok and self.durability is not None:
+            self.durability.log_unsubscribe(sub_id)
+        return ok
+
+    def scrub(self, sample: int | None = None, seed: int = 0) -> dict:
+        """Admin call: audit index/delta invariants on the live engine
+        (durability/scrub.py).  Run between ticks — it reads the same
+        state the tick loop mutates."""
+        from ..durability.scrub import scrub_engine
+
+        return scrub_engine(self.engine, sample=sample, seed=seed)
 
     def standing_matches(self, sub_id: int) -> list:
         """The subscription's accumulated current match set (canonical
@@ -262,8 +315,17 @@ class MatchServer:
         if self.cfg.coalesce_hot and self.update_queue:
             self._pull_hot_updates(batch_u)
         t_u = time.perf_counter()
+        if self.durability is not None:
+            # log-before-apply: the epoch is durable before any state
+            # mutates, so a crash in the gap REPLAYS the update on
+            # restart — an applied-but-unlogged epoch cannot exist
+            self.durability.log_epoch(
+                self.engine.epoch + 1, batch_u, "delta", self.cfg.compaction
+            )
         summary = self.engine.apply_updates(batch_u, compaction=self.cfg.compaction)
         self.update_summaries.append(summary)
+        if self.durability is not None:
+            self.durability.after_apply(self.engine)
         self._standing_tick()
         wall_u = time.perf_counter() - t_u
         self.update_s.append(wall_u)

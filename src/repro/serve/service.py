@@ -154,6 +154,10 @@ class ServiceConfig:
     # per-request trace sampling rate applied to the process tracer
     # (repro.obs.trace.TRACER) at construction; None leaves it untouched
     trace_rate: float | None = None
+    # crash-safe durability (durability/): DurabilityConfig or a live
+    # Durability, forwarded to the inner MatchServer — update ticks
+    # journal log-before-apply and snapshots fire on the tick thread
+    durability: object | None = None
 
 
 @dataclasses.dataclass
@@ -247,6 +251,7 @@ class MatchService:
                 max_updates_per_tick=cfg.max_updates_per_tick,
                 max_update_queue=cfg.max_update_queue,
                 compaction="defer" if cfg.background_compaction else "inline",
+                durability=cfg.durability,
             ),
         )
         self._queue: asyncio.PriorityQueue = asyncio.PriorityQueue()

@@ -459,13 +459,25 @@ class StandingQueryRegistry:
         }
 
     # ------------------------------------------------------------------
-    def register(self, q, callback=None, tenant: str = "") -> tuple:
+    def register(self, q, callback=None, tenant: str = "", sub_id: int | None = None) -> tuple:
         """Register a standing query; returns ``(sub_id, MatchDelta)``
         with the initial full evaluation as ``added`` (the callback is
-        NOT invoked for it — the caller already holds the delta)."""
+        NOT invoked for it — the caller already holds the delta).
+
+        ``sub_id`` pins the id — crash recovery re-registers journaled
+        subscriptions under their original ids, so subscriber handles
+        stay valid across a restart.  This registration path IS the
+        full-refresh rung of the fallback ladder, taken exactly once:
+        the returned delta carries the complete current match set."""
         state, delta = self.engine.match_incremental(q, None)
-        sid = self._next_id
-        self._next_id += 1
+        if sub_id is None:
+            sid = self._next_id
+            self._next_id += 1
+        else:
+            sid = int(sub_id)
+            if sid in self._subs:
+                raise ValueError(f"subscription id {sid} already registered")
+            self._next_id = max(self._next_id, sid + 1)
         self._subs[sid] = Subscription(
             sub_id=sid, query=q, state=state, callback=callback, tenant=tenant
         )
